@@ -1,0 +1,68 @@
+"""Paper ablations:
+  Table 4 — block size b x perplexity (incl. 1x1 unstructured baseline);
+  Table 5 — step_size robustness;
+  Table 6 — decay d;
+  Fig. 11 — dense-last-L placement;
+  plus the TPU-adaptation ablation: balanced vs global selection.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_cfg, replace_blast, row
+from benchmarks.bench_pretrain import run
+
+STEPS = 50
+
+
+def block_size():
+    for b in (8, 16, 32):
+        cfg = replace_blast(bench_cfg(), b_in=b, b_out=b, s_max=0.7,
+                            total_steps=STEPS, step_size=1)
+        tw, ppl, sp = run(cfg, STEPS)
+        row(f"tbl4_block_{b}x{b}", tw * 1e6 / STEPS,
+            f"ppl={ppl:.2f} sparsity={sp:.2f}")
+
+
+def step_size():
+    for ss in (1, 5, 10, 25):
+        cfg = replace_blast(bench_cfg(), step_size=ss, s_max=0.7,
+                            total_steps=STEPS)
+        tw, ppl, sp = run(cfg, STEPS)
+        row(f"tbl5_stepsize_{ss}", tw * 1e6 / STEPS, f"ppl={ppl:.2f}")
+
+
+def decay():
+    for d in (0, 10, 25):
+        cfg = replace_blast(bench_cfg(), decay=d, s_max=0.7,
+                            total_steps=STEPS)
+        tw, ppl, sp = run(cfg, STEPS)
+        row(f"tbl6_decay_{d}", tw * 1e6 / STEPS,
+            f"ppl={ppl:.2f} sparsity={sp:.2f}")
+
+
+def dense_last():
+    for L in (0, 1, 2):
+        cfg = replace_blast(bench_cfg(), dense_last=L, s_max=0.7,
+                            total_steps=STEPS)
+        tw, ppl, sp = run(cfg, STEPS)
+        row(f"fig11_denseL_{L}", tw * 1e6 / STEPS,
+            f"ppl={ppl:.2f} sparsity={sp:.2f}")
+
+
+def selection():
+    for sel in ("balanced", "global"):
+        cfg = replace_blast(bench_cfg(), selection=sel, s_max=0.7,
+                            total_steps=STEPS)
+        tw, ppl, sp = run(cfg, STEPS)
+        row(f"sel_{sel}", tw * 1e6 / STEPS, f"ppl={ppl:.2f}")
+
+
+def main():
+    block_size()
+    step_size()
+    decay()
+    dense_last()
+    selection()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Paper Fig. 4 — BSpMM kernel speedup vs dense, over sparsity x block
+size x (Emb, Seq). On CPU we measure the XLA twin of the kernel (the
+compute actually drops with sparsity) and report measured speedup plus
+the FLOP-ratio-derived roofline speedup (what the TPU kernel achieves
+when compute-bound)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core import packing, topk
+from repro.core.prune_grow import BlastSpec, generate_mask
+from repro.kernels import ops
+
+
+def _make(key, k_dim, n, bi, bo, s):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (k_dim, n), jnp.float32)
+    g = jax.random.normal(k2, (k_dim, n), jnp.float32)
+    spec = BlastSpec(b_in=bi, b_out=bo, s_max=s, total_steps=1)
+    m = generate_mask(spec, w, g, 1)
+    wm = topk.apply_block_mask(w, m, bi, bo)
+    return wm, packing.pack(wm, m, bi, bo)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    seq = 256
+    for emb in (256, 512):
+        n = 4 * emb                      # paper: N = 4 x Emb
+        x = jax.random.normal(key, (seq, emb), jnp.float32)
+        dense_w = jax.random.normal(key, (emb, n), jnp.float32)
+        f_dense = jax.jit(lambda x, w: x @ w)
+        t_dense = timeit(f_dense, x, dense_w)
+        for b in (32, 64):
+            for s in (0.5, 0.7, 0.9, 0.95):
+                _, p = _make(key, emb, n, b, b, s)
+                f_sp = jax.jit(lambda x, p=p: ops.bspmm_xla(x, p))
+                t_sp = timeit(f_sp, x)
+                flop_ratio = ops.flops_dense(seq, emb, n) / max(
+                    ops.flops_bspmm(seq, p), 1)
+                row(f"bspmm_emb{emb}_b{b}_s{int(s*100)}", t_sp,
+                    f"speedup={t_dense / t_sp:.2f}x "
+                    f"roofline_speedup={flop_ratio:.2f}x")
+        row(f"dense_emb{emb}", t_dense, "baseline")
+
+
+if __name__ == "__main__":
+    main()

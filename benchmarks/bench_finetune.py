@@ -1,0 +1,76 @@
+"""Paper Table 1 analogue — accuracy RECOVERY when sparsifying a dense
+pretrained model (the fine-tuning setting, §5.2): pretrain dense, then
+iteratively sparsify while training (with and without distillation) and
+report the held-out perplexity gap vs the dense model."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_cfg, replace_blast, row
+from repro.core.distill import cross_entropy
+from repro.data.pipeline import SyntheticLM
+from repro.models import registry
+from repro.optim import adamw
+from repro.training import train_loop
+
+
+def _ppl(cfg, state, src):
+    losses = []
+    for i in range(3):
+        b = src.batch(20_000 + i)
+        logits, _ = registry.forward(cfg, state.params,
+                                     jnp.asarray(b["tokens"]),
+                                     masks=state.masks or None)
+        losses.append(float(cross_entropy(logits,
+                                          jnp.asarray(b["labels"]))))
+    return math.exp(np.mean(losses))
+
+
+def main():
+    steps_pre, steps_ft = 80, 50
+    dense = replace_blast(bench_cfg(), enabled=False)
+    src = SyntheticLM(dense.vocab_size, seq_len=64, global_batch=16,
+                      seed=5)
+    opt = adamw.AdamWConfig(peak_lr=3e-3, warmup_steps=5,
+                            total_steps=steps_pre, weight_decay=0.01)
+    loop = train_loop.TrainLoopConfig(total_steps=steps_pre,
+                                      log_every=steps_pre)
+    tstate, _ = train_loop.train(dense, opt, src, loop,
+                                 log_fn=lambda m: None)
+    ppl_dense = _ppl(dense, tstate, src)
+    row("tbl1_dense", 0.0, f"ppl={ppl_dense:.2f}")
+
+    for s_max, b in ((0.7, 32), (0.9, 32), (0.7, 16)):
+        for kd in (0.0, 0.5):
+            cfg = replace_blast(bench_cfg(), s_max=s_max, b_in=b,
+                                b_out=b, total_steps=steps_ft,
+                                step_size=5)
+            import dataclasses
+            from repro.training import step as ts
+            state = ts.init_state(cfg, jax.random.PRNGKey(0))
+            # init student from the dense pretrained weights (§5.2);
+            # COPY: the train step donates its input buffers
+            state = dataclasses.replace(
+                state, params=jax.tree_util.tree_map(jnp.copy,
+                                                     tstate.params))
+            opt_ft = adamw.AdamWConfig(peak_lr=1e-3, warmup_steps=5,
+                                       total_steps=steps_ft,
+                                       weight_decay=0.01)
+            loop_ft = train_loop.TrainLoopConfig(total_steps=steps_ft,
+                                                 log_every=steps_ft)
+            state, _ = train_loop.train(
+                cfg, opt_ft, src, loop_ft, state=state,
+                log_fn=lambda m: None,
+                teacher_params=tstate.params if kd else None,
+                teacher_cfg=dense if kd else None, kd_beta=kd)
+            ppl = _ppl(cfg, state, src)
+            row(f"tbl1_blast_s{int(s_max*100)}_b{b}_kd{kd}", 0.0,
+                f"ppl={ppl:.2f} gap={(ppl - ppl_dense):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Paper Fig. 5 — MLP-layer speedup across the Llama family (1B..405B
+dims) at BLaST sparsities, and Fig. 7 — weight memory / #accelerators.
+
+The MLP dims are exact (configs/paper_models.LLAMA_FAMILY_MLP); the
+token batch is CPU-scale. Derived columns report the FLOP-bound speedup
+(the TPU expectation) and the packed-weight memory ratio."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.configs.paper_models import LLAMA_FAMILY_MLP
+from repro.core import packing, topk
+from repro.core.prune_grow import BlastSpec, generate_mask
+from repro.kernels import ops
+
+
+def main():
+    key = jax.random.PRNGKey(1)
+    tokens = 64
+    for name, (d, f) in LLAMA_FAMILY_MLP.items():
+        # scale dims down 8x for CPU wall-clock, keep the RATIO exact
+        ds, fs = d // 8, f // 8
+        x = jax.random.normal(key, (tokens, ds), jnp.float32)
+        ws = [jax.random.normal(jax.random.PRNGKey(i), shape) * 0.05
+              for i, shape in enumerate([(ds, fs), (ds, fs), (fs, ds)])]
+        f_dense = jax.jit(lambda x, a, b, c:
+                          (jax.nn.silu(x @ a) * (x @ b)) @ c)
+        t_dense = timeit(f_dense, x, *ws)
+        for s in (0.7, 0.8, 0.9, 0.95):
+            spec = BlastSpec(b_in=32, b_out=32, s_max=s, total_steps=1)
+            packs = []
+            dense_bytes = packed_bytes = 0
+            for i, w in enumerate(ws):
+                m = generate_mask(spec, w, w, 1)
+                wm = topk.apply_block_mask(w, m, 32, 32)
+                p = packing.pack(wm, m, 32, 32)
+                packs.append(p)
+                dense_bytes += w.size * 2            # bf16 serving
+                packed_bytes += (p.blocks.size * 2
+                                 + p.idx.size * 4)
+            f_sp = jax.jit(lambda x: ops.sparse_mlp_apply(
+                x, packs[0], packs[1], packs[2]))
+            t_sp = timeit(f_sp, x)
+            flops_d = 3 * ops.flops_dense(tokens, ds, fs)
+            flops_s = (2 * ops.flops_bspmm(tokens, packs[0])
+                       + ops.flops_bspmm(tokens, packs[2]))
+            row(f"mlp_{name}_s{int(s*100)}", t_sp,
+                f"speedup={t_dense/t_sp:.2f}x "
+                f"roofline_speedup={flops_d/max(flops_s,1):.2f}x "
+                f"mem_ratio={dense_bytes/max(packed_bytes,1):.2f}x")
+        row(f"mlp_{name}_dense", t_dense, "baseline")
+    # Fig. 7: full-model weight memory -> #GPUs (exact dims, no alloc)
+    for name, (d, f) in LLAMA_FAMILY_MLP.items():
+        layers = {"llama3.2-1b": 16, "llama3.2-3b": 28, "llama3.1-8b": 32,
+                  "llama3.1-70b": 80, "llama3.1-405b": 126}[name]
+        mlp = 3 * d * f * layers
+        other = (4 * d * d) * layers + 2 * 128_256 * d
+        for s in (0.0, 0.7, 0.95):
+            fp32 = 4 * (other + mlp * (1 - s))
+            gpus = int(np.ceil(fp32 / (96 * 2**30)))
+            row(f"gpus_{name}_s{int(s*100)}", 0.0,
+                f"fp32_GiB={fp32/2**30:.1f} gpus96GB={gpus}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 2 / Fig. 8 — pretraining: end-to-end time + perplexity,
+BLaST vs dense, on the synthetic corpus (OpenWebText stand-in)."""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from benchmarks.common import bench_cfg, replace_blast, row
+from repro.data.pipeline import SyntheticLM
+from repro.optim import adamw
+from repro.training import train_loop
+
+
+def run(cfg, steps=60, seed=3):
+    src = SyntheticLM(cfg.vocab_size, seq_len=64, global_batch=16,
+                      seed=seed)
+    opt = adamw.AdamWConfig(peak_lr=3e-3, warmup_steps=5,
+                            total_steps=steps, weight_decay=0.01)
+    loop = train_loop.TrainLoopConfig(total_steps=steps, log_every=steps)
+    t0 = time.time()
+    state, hist = train_loop.train(cfg, opt, src, loop,
+                                   log_fn=lambda m: None)
+    wall = time.time() - t0
+    # eval perplexity on held-out batches
+    import jax, jax.numpy as jnp
+    from repro.core.distill import cross_entropy
+    from repro.models import registry
+    losses = []
+    for i in range(3):
+        b = src.batch(10_000 + i)
+        logits, _ = registry.forward(cfg, state.params,
+                                     jnp.asarray(b["tokens"]),
+                                     masks=state.masks or None)
+        losses.append(float(cross_entropy(logits,
+                                          jnp.asarray(b["labels"]))))
+    ppl = math.exp(np.mean(losses))
+    return wall, ppl, hist[-1]["sparsity"]
+
+
+def main():
+    steps = 60
+    dense = bench_cfg()
+    dense = replace_blast(dense, enabled=False)
+    tw, ppl, _ = run(dense, steps)
+    row("pretrain_dense", tw * 1e6 / steps, f"ppl={ppl:.2f}")
+    for s_max, d in ((0.7, 0), (0.8, 20)):
+        cfg = bench_cfg()
+        cfg = replace_blast(cfg, s_max=s_max, decay=d, total_steps=steps)
+        tw, ppl, sp = run(cfg, steps)
+        row(f"pretrain_blast_s{int(s_max*100)}_d{d}",
+            tw * 1e6 / steps,
+            f"ppl={ppl:.2f} sparsity={sp:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Shared benchmark utilities. Every benchmark prints
+``name,us_per_call,derived`` CSV rows (task spec)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.prune_grow import BlastSpec
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time per call in microseconds (jit'd fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def row(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_cfg(**overrides) -> ModelConfig:
+    """The CPU-scale GPT2-ish model used by the paper-table benchmarks."""
+    base = dict(
+        name="bench", family="dense", num_layers=4, d_model=128,
+        num_heads=4, num_kv_heads=4, head_dim=32, d_ff=512,
+        vocab_size=512, mlp_kind="mlp2", mlp_act="gelu",
+        norm_kind="layernorm", tie_embeddings=True, remat=False,
+        compute_dtype="float32", chunk_size=32,
+        blast=BlastSpec(enabled=True, b_in=32, b_out=32, s_max=0.7,
+                        total_steps=60, step_size=10, dense_last=1,
+                        decay=0),
+    )
+    base.update(overrides)
+    return ModelConfig(**base)
+
+
+def replace_blast(cfg, **kw):
+    return dataclasses.replace(cfg, blast=dataclasses.replace(cfg.blast,
+                                                              **kw))

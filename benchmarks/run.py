@@ -1,0 +1,43 @@
+"""Benchmark harness — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (task spec).
+
+  bench_bspmm      Fig. 4  kernel speedup vs sparsity/block
+  bench_mlp_llama  Fig. 5  Llama-family MLP speedup + Fig. 7 memory/GPUs
+  bench_inference  Fig. 6  end-to-end decode speedup
+  bench_pretrain   Tbl. 2  pretrain wall-time + perplexity
+  bench_finetune   Tbl. 1  accuracy recovery (+distillation)
+  bench_ablations  Tbl. 4/5/6, Fig. 11, selection-mode ablation
+  bench_regrowth   Fig. 10 regrown-block ratio
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (bench_ablations, bench_bspmm, bench_finetune,
+                        bench_inference, bench_mlp_llama, bench_pretrain,
+                        bench_regrowth)
+
+ALL = {
+    "bspmm": bench_bspmm.main,
+    "mlp_llama": bench_mlp_llama.main,
+    "inference": bench_inference.main,
+    "pretrain": bench_pretrain.main,
+    "finetune": bench_finetune.main,
+    "ablations": bench_ablations.main,
+    "regrowth": bench_regrowth.main,
+}
+
+
+def main() -> None:
+    only = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in only:
+        t0 = time.time()
+        ALL[name]()
+        print(f"# {name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

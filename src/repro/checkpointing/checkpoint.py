@@ -1,0 +1,147 @@
+"""Fault-tolerant checkpointing (no orbax in the container; pure
+numpy + atomic renames).
+
+Properties required at 1000-node scale (DESIGN.md §4):
+  * checkpoints are stored LOGICALLY (full arrays, path-keyed npz), not
+    per-device — restore can reshard onto ANY mesh (elastic restart
+    after losing a pod);
+  * atomic: write to <dir>.tmp then os.replace; a crash mid-write never
+    corrupts the latest checkpoint;
+  * async: the array->host gather runs in the caller, the file write in
+    a background thread (training continues);
+  * keep-k retention + 'latest' discovery for auto-resume;
+  * the data-iterator state (step) and RNG are inside the state, so
+    restart replays the exact batch sequence.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def _unflatten_into(template, flat):
+    def rec(node, prefix):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{prefix}{k}/") for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            vals = [rec(v, f"{prefix}{i}/") for i, v in enumerate(node)]
+            return type(node)(vals)
+        return flat[prefix.rstrip("/")]
+    return rec(template, "")
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ----------------------------------------------------------- save
+    def save(self, step: int, state, blocking: bool = False,
+             extra: dict | None = None):
+        """Gather to host synchronously, write asynchronously."""
+        from repro.training.step import TrainState
+        tree = {"step": state.step, "params": state.params,
+                "opt_state": state.opt_state, "masks": state.masks,
+                "rng": state.rng} if isinstance(state, TrainState) \
+            else state
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        self.wait()
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
+            final = os.path.join(self.dir, f"step_{step:08d}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            meta = {"step": int(step), **(extra or {})}
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -------------------------------------------------------- restore
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``template``. With
+        ``shardings`` (same tree structure), arrays are placed sharded —
+        onto WHATEVER mesh the shardings reference (elastic reshard)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+    def restore_state(self, template_state, step: int | None = None,
+                      shardings=None):
+        """Restore a TrainState (template gives structure/dtypes)."""
+        from repro.training.step import TrainState
+        tmpl = {"step": template_state.step,
+                "params": template_state.params,
+                "opt_state": template_state.opt_state,
+                "masks": template_state.masks,
+                "rng": template_state.rng}
+        shd = None
+        if shardings is not None:
+            shd = {"step": shardings.step, "params": shardings.params,
+                   "opt_state": shardings.opt_state,
+                   "masks": shardings.masks, "rng": shardings.rng}
+        tree = self.restore(tmpl, step, shd)
+        return TrainState(step=tree["step"], params=tree["params"],
+                          opt_state=tree["opt_state"],
+                          masks=tree["masks"], rng=tree["rng"])

@@ -1,0 +1,16 @@
+"""BLaST core: blocked prune-and-grow sparsification (paper §3)."""
+from repro.core.prune_grow import BlastSpec, generate_mask, prune_weight
+from repro.core.schedule import keep_count, sparsity_at
+from repro.core.sparse_mlp import (apply_mask_ste, glu_mlp, init_masks,
+                                   mask_grads, maybe_mask, maybe_refresh,
+                                   mlp2, refresh_masks, tree_sparsity)
+from repro.core.packing import PackedBCSC, pack, pack_stacked, unpack
+from repro.core.distill import cross_entropy, distill_loss, kl_to_teacher
+
+__all__ = [
+    "BlastSpec", "generate_mask", "prune_weight", "keep_count",
+    "sparsity_at", "apply_mask_ste", "glu_mlp", "init_masks", "mask_grads",
+    "maybe_mask", "maybe_refresh", "mlp2", "refresh_masks", "tree_sparsity",
+    "PackedBCSC", "pack", "pack_stacked", "unpack", "cross_entropy",
+    "distill_loss", "kl_to_teacher",
+]

@@ -1,0 +1,45 @@
+"""Knowledge-distillation loss (paper §5.2): alpha * CE + beta * KL.
+
+Used in the post-training-compression setting: the dense pretrained model
+is the teacher, the BLaST-sparsified model is the student. KL is computed
+between student and teacher logits (temperature-scaled, standard
+Hinton-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_index: int = -100) -> jax.Array:
+    """Mean token CE. logits (..., V) f32-upcast; labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels != ignore_index).astype(jnp.float32)
+    return (nll * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def kl_to_teacher(student_logits: jax.Array, teacher_logits: jax.Array,
+                  temperature: float = 1.0) -> jax.Array:
+    """KL(teacher || student), mean over tokens (paper: L_KL between BLaST
+    logits and the dense pretrained model's logits)."""
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jax.nn.log_softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    kl = (jnp.exp(tp) * (tp - sp)).sum(axis=-1)
+    return (t * t) * kl.mean()
+
+
+def distill_loss(student_logits, labels, teacher_logits=None, *,
+                 alpha: float = 1.0, beta: float = 0.0,
+                 temperature: float = 1.0, ignore_index: int = -100):
+    """alpha * L_CE + beta * L_KL. With beta=0 (or no teacher) this is the
+    plain LM loss used in pretraining."""
+    loss = alpha * cross_entropy(student_logits, labels, ignore_index)
+    if teacher_logits is not None and beta != 0.0:
+        loss = loss + beta * kl_to_teacher(
+            student_logits, teacher_logits, temperature)
+    return loss

@@ -1,0 +1,133 @@
+"""Packed balanced-BCSC representation for serving (DESIGN.md §2).
+
+After training, each sparse weight W (K, N) with a *balanced* block mask
+(the same number ``nnz`` of kept blocks in every block-column) is packed
+into:
+
+    blocks : (Nb, nnz, b_in, b_out)   kept block values, column-major
+    idx    : (Nb, nnz) int32          block-row index of each kept block
+
+which is the static-shape TPU analogue of the paper's BCSC format. The
+Pallas kernel and the XLA scan formulation both consume this layout. For
+*unbalanced* (global top-k) masks, columns are padded with zero blocks up
+to the max per-column count (idx points at block-row 0; the zero values
+make the contribution exact).
+
+Pure-jnp, differentiable where it matters (pack is gather; unpack is
+scatter) — but serving treats packed weights as constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedBCSC:
+    blocks: jax.Array   # (..., Nb, nnz, b_in, b_out)
+    idx: jax.Array      # (..., Nb, nnz) int32
+    kb: int             # number of block-rows (STATIC pytree metadata)
+
+    @property
+    def nnz(self) -> int:
+        return self.idx.shape[-1]
+
+    @property
+    def nb(self) -> int:
+        return self.idx.shape[-2]
+
+    @property
+    def b_in(self) -> int:
+        return self.blocks.shape[-2]
+
+    @property
+    def b_out(self) -> int:
+        return self.blocks.shape[-1]
+
+    def dense_shape(self):
+        return (self.kb * self.b_in, self.nb * self.b_out)
+
+
+jax.tree_util.register_dataclass(
+    PackedBCSC, data_fields=["blocks", "idx"], meta_fields=["kb"])
+
+
+def max_nnz_per_col(block_mask: jax.Array) -> int:
+    """Static upper bound used to size the pack (requires concrete mask)."""
+    counts = jnp.asarray(block_mask).sum(axis=-2)
+    return int(counts.max())
+
+
+def pack(w: jax.Array, block_mask: jax.Array, b_in: int, b_out: int,
+         nnz: int | None = None) -> PackedBCSC:
+    """Pack masked weight into balanced BCSC.
+
+    w: (K, N); block_mask: (Kb, Nb) bool. ``nnz`` defaults to the max
+    per-column count (must be >= it). Leading batch dims are supported
+    via vmap by callers; this function handles a single matrix.
+    """
+    k, n = w.shape
+    kb, nb = k // b_in, n // b_out
+    assert block_mask.shape == (kb, nb)
+    if nnz is None:
+        nnz = max_nnz_per_col(block_mask)
+    # order rows of each column: kept blocks first (stable), then padding
+    keyed = jnp.where(block_mask, 0, 1)                    # kept -> 0
+    order = jnp.argsort(keyed, axis=0, stable=True)        # (Kb, Nb)
+    sel = order[:nnz].T.astype(jnp.int32)                  # (Nb, nnz)
+    valid = jnp.take_along_axis(block_mask.T, sel, axis=1) # (Nb, nnz)
+    idx = jnp.where(valid, sel, 0)
+    wb = w.reshape(kb, b_in, nb, b_out).transpose(2, 0, 1, 3)  # (Nb,Kb,bi,bo)
+    blocks = jnp.take_along_axis(
+        wb, idx[:, :, None, None], axis=1)                 # (Nb,nnz,bi,bo)
+    blocks = jnp.where(valid[:, :, None, None], blocks, 0.0).astype(w.dtype)
+    return PackedBCSC(blocks=blocks, idx=idx, kb=kb)
+
+
+def unpack(p: PackedBCSC) -> jax.Array:
+    """Packed -> dense (K, N). Padding blocks are zero so scatter-add is
+    exact even with duplicate idx 0 entries."""
+    nb, nnz, b_in, b_out = p.blocks.shape
+    dense_blocks = jnp.zeros((nb, p.kb, b_in, b_out), p.blocks.dtype)
+    dense_blocks = dense_blocks.at[
+        jnp.arange(nb)[:, None], p.idx].add(p.blocks)
+    # (Nb, Kb, bi, bo) -> (K, N)
+    return dense_blocks.transpose(1, 2, 0, 3).reshape(
+        p.kb * b_in, nb * b_out)
+
+
+def pack_stacked(w: jax.Array, block_mask: jax.Array, b_in: int, b_out: int,
+                 nnz: int) -> PackedBCSC:
+    """vmap ``pack`` over arbitrary leading dims (layers, experts)."""
+    lead = w.shape[:-2]
+    if not lead:
+        return pack(w, block_mask, b_in, b_out, nnz)
+    fn = lambda wi, mi: pack(wi, mi, b_in, b_out, nnz)
+    for _ in lead:
+        fn = jax.vmap(fn)
+    p = fn(w, block_mask)
+    return PackedBCSC(blocks=p.blocks, idx=p.idx,
+                      kb=w.shape[-2] // b_in)
+
+
+def pad_nnz(p: PackedBCSC, nnz: int) -> PackedBCSC:
+    """Pad per-column block count with zero blocks (idx 0 — exact, the
+    zero values contribute nothing). Used to align two operands of the
+    fused kernel."""
+    cur = p.idx.shape[-1]
+    if cur == nnz:
+        return p
+    assert nnz > cur, (nnz, cur)
+    pad_b = [(0, 0)] * (p.blocks.ndim - 3) + [(0, nnz - cur), (0, 0),
+                                              (0, 0)]
+    pad_i = [(0, 0)] * (p.idx.ndim - 1) + [(0, nnz - cur)]
+    return PackedBCSC(blocks=jnp.pad(p.blocks, pad_b),
+                      idx=jnp.pad(p.idx, pad_i), kb=p.kb)
+
+
+def storage_bytes(p: PackedBCSC) -> int:
+    """HBM bytes of the packed representation (paper Fig. 7 analogue)."""
+    return (p.blocks.size * p.blocks.dtype.itemsize
+            + p.idx.size * p.idx.dtype.itemsize)

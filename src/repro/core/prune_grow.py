@@ -1,0 +1,123 @@
+"""Blocked prune-and-grow (paper §3.2, Fig. 2), fully jit-safe.
+
+Per sparse weight matrix W (with gradient G), at every mask refresh:
+
+  1. score = Frobenius norm per (b_in, b_out) block of W and of G;
+  2. keep the top ``kept - grow`` blocks by |W| (the pruning function S);
+  3. *grow* ``grow`` blocks by |G| that are not already kept (RigL-style
+     difference step — the red blocks in paper Fig. 2);
+  4. newly grown blocks are zero-initialised (their weights were pruned
+     to zero earlier and the mask only re-enables their training), and
+     their optimizer moments are reset.
+
+The paper's variant regrows the *set difference* S(G) \\ S(W) on top of
+S(W) (transiently exceeding the budget); we use the fixed-budget RigL
+formulation so the kept-count exactly tracks the schedule — DESIGN.md §8
+records this deviation. ``grow_frac`` cosine-decays as in RigL.
+
+Everything here operates on one weight leaf; `sparse_mlp.py` maps it over
+the model's sparse-weight pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk
+from repro.core.schedule import keep_count, sparsity_at
+
+
+@dataclasses.dataclass(frozen=True)
+class BlastSpec:
+    """Static sparsification hyper-parameters for one model (paper Table 2)."""
+    enabled: bool = True
+    b_in: int = 128            # block rows (K / d_model side)
+    b_out: int = 128           # block cols (N / d_ff side) == paper's b
+    s_init: float = 0.0
+    s_max: float = 0.8
+    step_size: int = 100       # mask refresh interval (paper §5.4.2)
+    decay: int = 0             # d in Eq. 2 (paper §5.4.3)
+    total_steps: int = 10_000  # m in Eq. 2
+    dense_last: int = 2        # L rightmost MLP blocks stay dense (§5.4.4)
+    selection: Literal["balanced", "global"] = "balanced"
+    grow_frac: float = 0.3     # fraction of kept budget regrown by |G|
+    grow_frac_end: float = 0.0 # cosine-decayed to this by total_steps
+
+    def block_grid(self, k: int, n: int) -> tuple[int, int]:
+        assert k % self.b_in == 0 and n % self.b_out == 0, (
+            f"weight {(k, n)} not tiled by block ({self.b_in},{self.b_out})")
+        return k // self.b_in, n // self.b_out
+
+
+def grow_count(spec: BlastSpec, step, kept):
+    """Number of blocks regrown by gradient at this refresh (cosine decay)."""
+    frac = jnp.clip(step / max(spec.total_steps, 1), 0.0, 1.0)
+    g = spec.grow_frac_end + 0.5 * (spec.grow_frac - spec.grow_frac_end) * (
+        1.0 + jnp.cos(jnp.pi * frac))
+    # never grow more than kept-1 (at least one block chosen by |W|)
+    return jnp.minimum((g * kept).astype(jnp.int32),
+                       jnp.maximum(kept - 1, 0))
+
+
+def _select(spec: BlastSpec, scores: jax.Array, k) -> jax.Array:
+    if spec.selection == "balanced":
+        return topk.topk_mask_per_col(scores, k)
+    return topk.topk_mask_global(scores, k * scores.shape[-1])
+
+
+def generate_mask(spec: BlastSpec, w: jax.Array, g: jax.Array,
+                  step) -> jax.Array:
+    """One prune-and-grow mask refresh for one weight. Returns bool block
+    mask of shape (..., Kb, Nb).
+
+    ``step`` may be traced. For ``balanced`` selection the keep/grow
+    budgets are per block-column; for ``global`` they are scaled by Nb.
+    """
+    wn = topk.block_norms(w, spec.b_in, spec.b_out)
+    gn = topk.block_norms(g, spec.b_in, spec.b_out)
+    kb = wn.shape[-2]
+    s = sparsity_at(step, s_init=spec.s_init, s_max=spec.s_max,
+                    total_steps=spec.total_steps, decay=spec.decay)
+    kept = keep_count(s, kb)                       # per-column budget
+    grow = grow_count(spec, step, kept)
+
+    keep_mask = _select(spec, wn, kept - grow)
+    # difference step: gradient-selected blocks not already kept
+    gn_masked = jnp.where(keep_mask, -jnp.inf, gn)
+    grow_mask = _select(spec, gn_masked, grow)
+    return keep_mask | grow_mask
+
+
+def prune_weight(spec: BlastSpec, w: jax.Array,
+                 block_mask: jax.Array) -> jax.Array:
+    """prune_weights() of Listing 1: zero out pruned blocks."""
+    return topk.apply_block_mask(w, block_mask, spec.b_in, spec.b_out)
+
+
+def refresh_mask_and_weight(spec: BlastSpec, w, g, old_mask, step):
+    """Full refresh: new mask, pruned weight, and the set of newly-grown
+    blocks (for optimizer moment reset). Regrown weights are zeroed —
+    they were already zero (pruned) but we enforce it (paper: 'initially
+    set to zero')."""
+    new_mask = generate_mask(spec, w, g, step)
+    grown = new_mask & ~old_mask
+    w_new = prune_weight(spec, w, new_mask)
+    # enforce zero-init of regrown blocks
+    w_new = jnp.where(
+        topk.expand_mask(grown, spec.b_in, spec.b_out), 0.0, w_new
+    ).astype(w.dtype)
+    return new_mask, w_new, grown
+
+
+def initial_mask(spec: BlastSpec, w: jax.Array) -> jax.Array:
+    """All-ones mask at s_init=0 (or scheduled-at-0 sparsity by |W|)."""
+    kb, nb = (w.shape[-2] // spec.b_in, w.shape[-1] // spec.b_out)
+    lead = w.shape[:-2]
+    if spec.s_init <= 0.0:
+        return jnp.ones(lead + (kb, nb), bool)
+    wn = topk.block_norms(w, spec.b_in, spec.b_out)
+    kept = keep_count(jnp.float32(spec.s_init), kb)
+    return _select(spec, wn, kept)

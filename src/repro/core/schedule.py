@@ -1,0 +1,32 @@
+"""Sparsity schedule (paper Eq. 2, Zhu & Gupta cubic ramp).
+
+``s_i = s_max + (s_init - s_max) * (1 - i / (m - d))^3``
+
+clamped so that sparsity is ``s_init`` at step 0 and reaches ``s_max`` at
+step ``m - d`` (the decay term ``d`` pulls the saturation point earlier,
+activating the sparse kernels sooner — paper §5.4.3).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sparsity_at(step, *, s_init: float, s_max: float, total_steps: int,
+                decay: int = 0):
+    """Scheduled sparsity at ``step`` (jit-safe; ``step`` may be traced).
+
+    Returns a float32 scalar in [s_init, s_max].
+    """
+    horizon = max(int(total_steps) - int(decay), 1)
+    frac = jnp.clip(step / horizon, 0.0, 1.0)
+    s = s_max + (s_init - s_max) * (1.0 - frac) ** 3
+    return jnp.asarray(s, jnp.float32)
+
+
+def keep_count(sparsity, n_blocks: int, minimum: int = 1):
+    """Number of blocks to KEEP at ``sparsity`` out of ``n_blocks``.
+
+    ceil((1 - s) * n), clamped to [minimum, n_blocks]. jit-safe.
+    """
+    kept = jnp.ceil((1.0 - sparsity) * n_blocks).astype(jnp.int32)
+    return jnp.clip(kept, minimum, n_blocks)

@@ -1,0 +1,256 @@
+"""Block-sparse MLP forward + mask-tree management (the paper's §3 glue).
+
+Training path ("masked dense", DESIGN.md §2): the forward multiplies the
+weight by its expanded block mask. A custom VJP makes the *backward*
+return the FULL dense gradient (the paper keeps "the dense weight and
+gradient matrices intact" — the dense gradient is what drives the grow
+step), while the optimizer applies the mask to updates so pruned blocks
+never move (RigL semantics). One backward pass yields both the training
+gradient (dense·mask) and the grow-scoring gradient (dense).
+
+Mask trees: model params are nested dicts with stacked layer leading
+dims; each model family declares its sparse-weight paths. The helpers
+here init/refresh masks for all declared paths, honouring the
+``dense_last`` L layers (paper §5.4.4) via per-layer dense flags.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topk
+from repro.core.prune_grow import BlastSpec, generate_mask, prune_weight
+
+Params = dict
+MaskTree = dict  # path_str -> bool block mask, stacked like the weight
+
+
+# ---------------------------------------------------------------- STE mask
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def apply_mask_ste(w: jax.Array, block_mask: jax.Array,
+                   b_in: int, b_out: int) -> jax.Array:
+    """w * expand(mask); backward passes the dense (unmasked) gradient."""
+    return topk.apply_block_mask(w, block_mask, b_in, b_out)
+
+
+def _ste_fwd(w, block_mask, b_in, b_out):
+    return topk.apply_block_mask(w, block_mask, b_in, b_out), block_mask
+
+
+def _ste_bwd(b_in, b_out, block_mask, g):
+    # dense gradient to the weight; mask is boolean (no cotangent)
+    return g, jnp.zeros_like(block_mask)
+
+
+apply_mask_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+# Convention: BlastSpec.b_in tiles the d_model side, b_out tiles the
+# d_ff side, for EVERY matrix. Up-projections (D, F) use (b_in, b_out);
+# down-projections (F, D) use the swapped (b_out, b_in). A weight's
+# orientation is derived from its leaf name.
+_SWAPPED_LEAVES = ("w_down", "w_out", "ws_down")
+
+
+def block_dims_for(spec: BlastSpec, path: str) -> tuple[int, int]:
+    leaf = path.split("/")[-1]
+    if leaf in _SWAPPED_LEAVES:
+        return spec.b_out, spec.b_in
+    return spec.b_in, spec.b_out
+
+
+def maybe_mask(w: jax.Array, mask: jax.Array | None,
+               spec: BlastSpec | None, swapped: bool = False) -> jax.Array:
+    if mask is None or spec is None or not spec.enabled:
+        return w
+    bi, bo = (spec.b_out, spec.b_in) if swapped else (spec.b_in, spec.b_out)
+    return apply_mask_ste(w, mask, bi, bo)
+
+
+# ------------------------------------------------------------ MLP forwards
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    return {
+        "silu": jax.nn.silu,
+        "gelu": functools.partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def _is_packed(w) -> bool:
+    from repro.core.packing import PackedBCSC
+    return isinstance(w, PackedBCSC)
+
+
+def glu_mlp(x, w_gate, w_up, w_down, *, act="silu",
+            masks=None, spec: BlastSpec | None = None):
+    """Gated MLP: (act(x W_g) * (x W_u)) W_d — paper Eq. (1) for silu.
+
+    masks: optional dict with keys 'w_gate','w_up','w_down'. Weights may
+    be ``PackedBCSC`` (serving): dispatches to the fused BSpMM path."""
+    if _is_packed(w_gate):
+        from repro.kernels import ops
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        y = ops.sparse_mlp_apply(x2, w_gate, w_up, w_down, act=act)
+        return y.reshape(*lead, y.shape[-1])
+    m = masks or {}
+    dt = x.dtype
+    wg = maybe_mask(w_gate, m.get("w_gate"), spec).astype(dt)
+    wu = maybe_mask(w_up, m.get("w_up"), spec).astype(dt)
+    wd = maybe_mask(w_down, m.get("w_down"), spec, swapped=True).astype(dt)
+    h = act_fn(act)(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+def mlp2(x, w_in, w_out, b_in_=None, b_out_=None, *, act="gelu",
+         masks=None, spec: BlastSpec | None = None, square: bool = False):
+    """Two-matrix MLP (GPT-2 / ViT / whisper): act(x W1 + b1) W2 + b2.
+
+    ``square``: rwkv6 channel-mix squares the activation."""
+    if _is_packed(w_in):
+        from repro.kernels import ops
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1])
+        h = ops.bspmm(x2, w_in)
+        if b_in_ is not None:
+            h = h + b_in_.astype(h.dtype)
+        h = act_fn(act)(h)
+        if square:
+            h = h * h
+        y = ops.bspmm(h, w_out)
+        if b_out_ is not None:
+            y = y + b_out_.astype(y.dtype)
+        return y.reshape(*lead, y.shape[-1])
+    m = masks or {}
+    dt = x.dtype
+    w1 = maybe_mask(w_in, m.get("w_in"), spec).astype(dt)
+    w2 = maybe_mask(w_out, m.get("w_out"), spec, swapped=True).astype(dt)
+    h = x @ w1
+    if b_in_ is not None:
+        h = h + b_in_.astype(dt)
+    h = act_fn(act)(h)
+    if square:
+        h = h * h
+    y = h @ w2
+    if b_out_ is not None:
+        y = y + b_out_.astype(dt)
+    return y
+
+
+# ------------------------------------------------------- mask-tree helpers
+def get_path(tree: Params, path: str):
+    node = tree
+    for k in path.split("/"):
+        node = node[k]
+    return node
+
+
+def set_path(tree: Params, path: str, value) -> Params:
+    """Functional set (copies dicts along the path)."""
+    keys = path.split("/")
+    def rec(node, i):
+        node = dict(node)
+        if i == len(keys) - 1:
+            node[keys[i]] = value
+        else:
+            node[keys[i]] = rec(node[keys[i]], i + 1)
+        return node
+    return rec(tree, 0)
+
+
+def _dense_flag_mask(new_mask: jax.Array, dense_flags, path: str = ""):
+    """Force all-kept mask on layers whose dense flag is set.
+
+    new_mask: (L, ..., Kb, Nb); dense_flags: (L,) bool, or a dict keyed
+    by stack prefix (whisper has encoder/decoder stacks of different
+    depth), or None."""
+    if isinstance(dense_flags, dict):
+        dense_flags = dense_flags.get(path.split("/")[0])
+    if dense_flags is None:
+        return new_mask
+    shape = (-1,) + (1,) * (new_mask.ndim - 1)
+    return jnp.where(dense_flags.reshape(shape), True, new_mask)
+
+
+def init_masks(spec: BlastSpec, params: Params, sparse_paths: list[str],
+               dense_flags: jax.Array | None = None) -> MaskTree:
+    """All-kept initial masks (s_init=0) for every declared sparse weight."""
+    masks: MaskTree = {}
+    for path in sparse_paths:
+        w = get_path(params, path)
+        bi, bo = block_dims_for(spec, path)
+        kb, nb = w.shape[-2] // bi, w.shape[-1] // bo
+        masks[path] = jnp.ones(w.shape[:-2] + (kb, nb), bool)
+    return masks
+
+
+def refresh_masks(spec: BlastSpec, params: Params, dense_grads: Params,
+                  masks: MaskTree, step,
+                  dense_flags: jax.Array | None = None
+                  ) -> tuple[MaskTree, Params, MaskTree]:
+    """generate_masks() + prune_weights() of paper Listing 1 over the whole
+    mask tree. Returns (new_masks, pruned_params, grown_masks).
+
+    ``dense_grads`` is the full (unmasked) gradient pytree from the STE
+    backward. Stacked leading dims (layers, experts) are vmapped."""
+    import dataclasses as _dc
+    new_masks: MaskTree = {}
+    grown: MaskTree = {}
+    new_params = params
+    for path, old in masks.items():
+        w = get_path(params, path)
+        g = get_path(dense_grads, path)
+        bi, bo = block_dims_for(spec, path)
+        pspec = _dc.replace(spec, b_in=bi, b_out=bo)
+        gen = lambda wi, gi: generate_mask(pspec, wi, gi, step)
+        for _ in range(w.ndim - 2):
+            gen = jax.vmap(gen)
+        nm = _dense_flag_mask(gen(w, g), dense_flags, path)
+        gr = nm & ~old
+        w_new = prune_weight(pspec, w, nm)
+        w_new = jnp.where(
+            topk.expand_mask(gr, bi, bo), 0.0, w_new).astype(w.dtype)
+        new_masks[path] = nm
+        grown[path] = gr
+        new_params = set_path(new_params, path, w_new)
+    return new_masks, new_params, grown
+
+
+def maybe_refresh(spec: BlastSpec, params, dense_grads, masks, step,
+                  dense_flags=None):
+    """Refresh every ``spec.step_size`` steps, inside jit via lax.cond.
+
+    Returns (masks, params, grown_or_zeros)."""
+    if not spec.enabled:
+        zeros = {p: jnp.zeros_like(m) for p, m in masks.items()}
+        return masks, params, zeros
+
+    def do(_):
+        return refresh_masks(spec, params, dense_grads, masks, step,
+                             dense_flags)
+
+    def skip(_):
+        zeros = {p: jnp.zeros_like(m) for p, m in masks.items()}
+        return masks, params, zeros
+
+    return jax.lax.cond(step % spec.step_size == 0, do, skip, operand=None)
+
+
+def mask_grads(masks: MaskTree, grads: Params, spec: BlastSpec) -> Params:
+    """Apply masks to the dense gradients before the optimizer step."""
+    out = grads
+    for path, m in masks.items():
+        g = get_path(grads, path)
+        bi, bo = block_dims_for(spec, path)
+        out = set_path(out, path, topk.apply_block_mask(g, m, bi, bo))
+    return out
+
+
+def tree_sparsity(masks: MaskTree) -> jax.Array:
+    """Overall fraction of pruned blocks across the mask tree."""
+    tot = sum(m.size for m in masks.values())
+    kept = sum(m.sum() for m in masks.values())
+    return 1.0 - kept / tot

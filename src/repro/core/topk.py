@@ -1,0 +1,79 @@
+"""Block-granularity scoring and top-k mask selection (paper §3.2, S()).
+
+A weight matrix ``W`` of shape (K, N) is viewed as a grid of
+``(K/b_in) x (N/b_out)`` blocks. ``S()`` scores each block by its
+Frobenius norm and keeps the top blocks at the scheduled sparsity.
+
+Two selection modes:
+  * ``global``   — paper-faithful: top-k over the whole block grid.
+  * ``balanced`` — TPU adaptation: top-k *per block-column*, so every
+    block-column keeps the same number of blocks. This makes the packed
+    BCSC representation static-shaped and perfectly load-balanced across
+    TP shards (DESIGN.md §2).
+
+All functions are jit-safe with *dynamic* keep counts (rank-threshold
+trick: rank = argsort(argsort(-scores)); mask = rank < k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_norms(w: jax.Array, b_in: int, b_out: int) -> jax.Array:
+    """Frobenius norm of each (b_in, b_out) block.
+
+    w: (..., K, N) -> (..., K//b_in, N//b_out)  float32.
+    Leading dims (e.g. experts) are preserved.
+    """
+    *lead, k, n = w.shape
+    assert k % b_in == 0 and n % b_out == 0, (
+        f"block ({b_in},{b_out}) does not tile weight {(k, n)}")
+    kb, nb = k // b_in, n // b_out
+    w2 = (w.astype(jnp.float32) ** 2).reshape(*lead, kb, b_in, nb, b_out)
+    return jnp.sqrt(w2.sum(axis=(-3, -1)))
+
+
+def _ranks_desc(s: jax.Array) -> jax.Array:
+    """rank[i] = position of s[i] in a descending sort of the last axis.
+
+    Deterministic (stable ties by index)."""
+    order = jnp.argsort(-s, axis=-1, stable=True)
+    return jnp.argsort(order, axis=-1)
+
+
+def topk_mask_global(scores: jax.Array, k) -> jax.Array:
+    """Bool mask keeping the ``k`` largest entries over the last TWO axes
+    (the block grid); leading dims (e.g. experts) select independently.
+
+    ``k`` may be a traced int32 scalar (dynamic)."""
+    *lead, kb, nb = scores.shape
+    ranks = _ranks_desc(scores.reshape(*lead, kb * nb))
+    return (ranks < k).reshape(scores.shape)
+
+
+def topk_mask_per_col(scores: jax.Array, k) -> jax.Array:
+    """Bool mask keeping the ``k`` largest entries of every block-column.
+
+    scores: (..., Kb, Nb); selection over the Kb axis independently per
+    column. ``k`` may be traced."""
+    s = jnp.swapaxes(scores, -2, -1)       # (..., Nb, Kb)
+    mask = _ranks_desc(s) < k
+    return jnp.swapaxes(mask, -1, -2)
+
+
+def expand_mask(block_mask: jax.Array, b_in: int, b_out: int) -> jax.Array:
+    """(..., Kb, Nb) bool -> (..., Kb*b_in, Nb*b_out) elementwise mask."""
+    m = jnp.repeat(block_mask, b_in, axis=-2)
+    return jnp.repeat(m, b_out, axis=-1)
+
+
+def apply_block_mask(w: jax.Array, block_mask: jax.Array,
+                     b_in: int, b_out: int) -> jax.Array:
+    """Zero out pruned blocks of ``w`` (mask may have leading dims)."""
+    return w * expand_mask(block_mask, b_in, b_out).astype(w.dtype)
+
+
+def mask_sparsity(block_mask: jax.Array) -> jax.Array:
+    """Fraction of pruned blocks (float32 scalar)."""
+    return 1.0 - block_mask.astype(jnp.float32).mean()

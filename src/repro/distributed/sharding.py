@@ -1,0 +1,140 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §4).
+
+Every parameter declares logical axis names (ParamSpec.axes); the rules
+below map them to mesh axes. A rule is dropped automatically when the
+dimension is not divisible by the mesh-axis size (e.g. 4 kv heads on a
+16-way model axis -> replicated), so one rule table serves all ten
+architectures.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> candidate mesh axes (in order; all that fit are used)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "vocab": ("model",),
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "ssm_proj": ("model",),
+    "ssm_conv": ("model",),
+    "ssm_inner": ("model",),
+    "ssm_heads": ("model",),
+    "kv_seq": ("model",),     # decode-cache sequence dim (DESIGN.md §5)
+    # replicated: embed, embed2, head_dim, layers, seq, None
+}
+
+
+def _axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple[Any, ...], mesh: Mesh,
+             rules: dict | None = None) -> P:
+    """PartitionSpec for one array, honouring divisibility."""
+    rules = rules or DEFAULT_RULES
+    sizes = _axis_sizes(mesh)
+    parts = []
+    used: set[str] = set()
+    for dim, ax in zip(shape, axes):
+        cand = rules.get(ax) if ax is not None else None
+        if not cand:
+            parts.append(None)
+            continue
+        chosen = []
+        rem = dim
+        for name in cand:
+            if name in sizes and name not in used \
+                    and rem % sizes[name] == 0:
+                chosen.append(name)
+                used.add(name)
+                rem //= sizes[name]
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    return P(*parts)
+
+
+def param_sharding_tree(param_specs: dict, mesh: Mesh,
+                        rules: dict | None = None):
+    """NamedSharding tree parallel to a ParamSpec tree."""
+    from repro.models.params import ParamSpec
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, mesh,
+                                               rules)),
+        param_specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def mask_sharding_tree(masks_abstract: dict, weight_axes: dict,
+                       sparse_paths: list[str], mesh: Mesh,
+                       rules: dict | None = None):
+    """Masks shard like their weights (block dims inherit the weight's
+    logical axes; divisibility is re-checked against block counts)."""
+    from repro.core.sparse_mlp import get_path
+    out = {}
+    for path in sparse_paths:
+        axes = get_path(weight_axes, path)
+        arr = masks_abstract[path]
+        out[path] = NamedSharding(
+            mesh, spec_for(arr.shape, axes, mesh, rules))
+    return out
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def batch_sharding(mesh: Mesh, ndim: int,
+                   batch_dim: int | None = None) -> NamedSharding:
+    """Batch over the data axes; with ``batch_dim`` given, axes that do
+    not divide it are dropped (long_500k has global_batch=1)."""
+    sizes = _axis_sizes(mesh)
+    axes = [a for a in ("pod", "data") if a in sizes]
+    if batch_dim is not None:
+        chosen, got = [], 1
+        for a in axes:
+            if (batch_dim // got) % sizes[a] == 0:
+                chosen.append(a)
+                got *= sizes[a]
+        axes = chosen
+    first = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+    return NamedSharding(mesh, P(*([first] + [None] * (ndim - 1))))
+
+
+def cache_sharding(mesh: Mesh, shape: tuple[int, ...],
+                   seq_axis: int = 2) -> NamedSharding:
+    """KV caches: (L, B, S, KV, hd) -> batch over data axes, S over model
+    (both only when divisible)."""
+    sizes = _axis_sizes(mesh)
+    parts: list[Any] = [None] * len(shape)
+    baxes = [a for a in ("pod", "data") if a in sizes
+             and shape[1] % sizes[a] == 0]
+    # use as many batch axes as divide
+    got = 1
+    chosen = []
+    for a in baxes:
+        if (shape[1] // got) % sizes[a] == 0:
+            chosen.append(a)
+            got *= sizes[a]
+    if chosen:
+        parts[1] = tuple(chosen) if len(chosen) > 1 else chosen[0]
+    if len(shape) > seq_axis and "model" in sizes \
+            and shape[seq_axis] % sizes["model"] == 0:
+        parts[seq_axis] = "model"
+    return NamedSharding(mesh, P(*parts))
+
+
+def count_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in leaves)

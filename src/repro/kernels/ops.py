@@ -1,0 +1,127 @@
+"""Jitted wrappers + GSPMD-partitionable XLA twin of the BSpMM kernel.
+
+Three execution backends for the same balanced-BCSC math:
+
+  * ``backend='pallas'``      — the Mosaic TPU kernel (production TPU);
+  * ``backend='pallas_interp'``— same kernel, interpret mode (CPU tests);
+  * ``backend='xla'``          — gather+einsum formulation that GSPMD can
+    partition (used inside the multi-pod dry-run / serving so the
+    compiled HLO carries the true sparse FLOP count and the packed
+    memory footprint — DESIGN.md §2).
+
+``sparse_mlp_apply`` is the full paper Eq. (1) with packed weights.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedBCSC
+from repro.kernels import bspmm as _pk
+
+
+def bspmm_xla(x: jax.Array, packed: PackedBCSC) -> jax.Array:
+    """Y = X @ W, packed balanced BCSC, expressed in partitionable XLA.
+
+    xb = X viewed as (M, Kb, b_in); for every block-column j we gather its
+    ``nnz`` X tiles and contract (nnz, b_in) at once — exactly the Pallas
+    kernel's dataflow, with XLA's gather playing the index-map role.
+    FLOPs = 2 * M * nnz * b_in * N  ==  dense * (1 - sparsity)."""
+    m, k_dim = x.shape
+    nb, nnz, b_in, b_out = packed.blocks.shape
+    xb = x.reshape(m, packed.kb, b_in)
+    xg = jnp.take(xb, packed.idx, axis=1)        # (M, Nb, nnz, b_in)
+    y = jnp.einsum("mjnb,jnbo->mjo", xg, packed.blocks,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(m, nb * b_out).astype(x.dtype)
+
+
+def bspmm(x: jax.Array, packed: PackedBCSC, *, backend: str = "xla",
+          blk_m: int = 128) -> jax.Array:
+    if backend == "xla":
+        return bspmm_xla(x, packed)
+    return _pk.bspmm(x, packed, blk_m=blk_m,
+                     interpret=(backend == "pallas_interp"))
+
+
+def fused_glu(x, p_gate, p_up, *, act="silu", backend="xla", blk_m=128):
+    if backend == "xla":
+        import repro.core.sparse_mlp as sm
+        hg = bspmm_xla(x, p_gate).astype(jnp.float32)
+        hu = bspmm_xla(x, p_up).astype(jnp.float32)
+        return (sm.act_fn(act)(hg) * hu).astype(x.dtype)
+    return _pk.fused_glu(x, p_gate, p_up, act=act, blk_m=blk_m,
+                         interpret=(backend == "pallas_interp"))
+
+
+def sparse_mlp_apply(x: jax.Array, p_gate: PackedBCSC, p_up: PackedBCSC,
+                     p_down: PackedBCSC, *, act: str = "silu",
+                     backend: str = "xla", blk_m: int = 128) -> jax.Array:
+    """Paper Eq. (1): Y = (act(X Wg) * (X Wu)) Wd, all three packed.
+
+    The front half is ONE fused kernel; the second contraction is a
+    second BSpMM (triple fusion would need a (blk_m, d_ff) VMEM resident
+    intermediate — DESIGN.md §2)."""
+    h = fused_glu(x, p_gate, p_up, act=act, backend=backend, blk_m=blk_m)
+    return bspmm(h, p_down, backend=backend, blk_m=blk_m)
+
+
+def bspmm_t_xla(dy: jax.Array, packed: PackedBCSC) -> jax.Array:
+    """dX = dY @ W^T, partitionable XLA twin of kernels/bspmm_t.py:
+    per-(column, k) partials scattered-added into the K block grid."""
+    m = dy.shape[0]
+    nb, nnz, b_in, b_out = packed.blocks.shape
+    dyb = dy.reshape(m, nb, b_out)
+    # partials P[m, j, k, bi] = dY_j @ Wblk[j,k]^T
+    parts = jnp.einsum("mjo,jkio->mjki", dyb, packed.blocks,
+                       preferred_element_type=jnp.float32)
+    dxb = jnp.zeros((m, packed.kb, b_in), jnp.float32)
+    dxb = dxb.at[:, packed.idx.reshape(-1)].add(
+        parts.reshape(m, nb * nnz, b_in))
+    return dxb.reshape(m, packed.kb * b_in).astype(dy.dtype)
+
+
+def bspmm_grad_blocks(x: jax.Array, dy: jax.Array, packed: PackedBCSC
+                      ) -> jax.Array:
+    """dW blocks: for kept block (j,k): X[:, idx[j,k]]^T @ dY_j —
+    gathered, no dense dW materialisation (sparse fine-tuning)."""
+    m = x.shape[0]
+    nb, nnz, b_in, b_out = packed.blocks.shape
+    xb = x.reshape(m, packed.kb, b_in)
+    xg = jnp.take(xb, packed.idx, axis=1)           # (M, Nb, nnz, bi)
+    dyb = dy.reshape(m, nb, b_out)
+    return jnp.einsum("mjki,mjo->jkio", xg, dyb,
+                      preferred_element_type=jnp.float32
+                      ).astype(packed.blocks.dtype)
+
+
+def make_bspmm_trainable(idx: jax.Array, kb: int):
+    """Factory: Y = X @ W with a SPARSE backward for a FIXED mask
+    structure (idx closed over — the paper's fine-tuning stage at final
+    sparsity). Returns f(x, blocks) with custom VJP: dX via the
+    transposed BSpMM, dW only on kept blocks."""
+
+    @jax.custom_vjp
+    def f(x, blocks):
+        return bspmm_xla(x, PackedBCSC(blocks=blocks, idx=idx, kb=kb))
+
+    def fwd(x, blocks):
+        return f(x, blocks), (x, blocks)
+
+    def bwd(res, dy):
+        x, blocks = res
+        p = PackedBCSC(blocks=blocks, idx=idx, kb=kb)
+        return bspmm_t_xla(dy, p), bspmm_grad_blocks(x, dy, p)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def flops_bspmm(m: int, packed: PackedBCSC) -> int:
+    """True sparse FLOPs of one BSpMM call."""
+    nb, nnz, b_in, b_out = packed.blocks.shape
+    return 2 * m * nb * nnz * b_in * b_out
+
+
+def flops_dense(m: int, k: int, n: int) -> int:
+    return 2 * m * k * n

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the BLaST kernels (the ``ref.py`` of each kernel).
+
+Everything here is the *definitionally correct* implementation, used by
+tests to validate the Pallas kernels (interpret mode) and the XLA scan
+formulation over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedBCSC, unpack
+
+
+def bspmm_ref(x: jax.Array, packed: PackedBCSC) -> jax.Array:
+    """Y = X @ W  with W given in packed balanced BCSC. Dense reference:
+    unpack to dense and matmul in f32."""
+    w = unpack(packed)
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def bspmm_masked_ref(x: jax.Array, w: jax.Array, mask_elem: jax.Array
+                     ) -> jax.Array:
+    """Masked-dense reference: Y = X @ (W * mask)."""
+    wm = (w * mask_elem.astype(w.dtype)).astype(jnp.float32)
+    return (x.astype(jnp.float32) @ wm).astype(x.dtype)
+
+
+def fused_glu_ref(x: jax.Array, p_gate: PackedBCSC, p_up: PackedBCSC,
+                  act: str = "silu") -> jax.Array:
+    """H = act(X Wg) * (X Wu) with both weights packed BCSC (paper §3.3.3
+    fused Sparse-MLP front half)."""
+    import repro.core.sparse_mlp as sm
+    hg = bspmm_ref(x, p_gate).astype(jnp.float32)
+    hu = bspmm_ref(x, p_up).astype(jnp.float32)
+    return (sm.act_fn(act)(hg) * hu).astype(x.dtype)
+
+
+def sparse_mlp_ref(x, p_gate, p_up, p_down, act: str = "silu"):
+    """Full paper Eq. (1) with packed weights:
+    Y = (act(X Wg) * (X Wu)) Wd."""
+    h = fused_glu_ref(x, p_gate, p_up, act)
+    return bspmm_ref(h, p_down)

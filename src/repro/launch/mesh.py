@@ -1,0 +1,21 @@
+"""Production mesh builders (task spec, MULTI-POD DRY-RUN §1).
+
+``make_production_mesh`` is a FUNCTION so importing this module never
+touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a (data, model) mesh — used by tests
+    with xla_force_host_platform_device_count set small."""
+    n = len(jax.devices())
+    shape = (max(n // 2, 1), 2 if n >= 2 else 1)
+    return jax.make_mesh(shape, ("data", "model"))

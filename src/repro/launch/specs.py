@@ -1,0 +1,66 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every
+(architecture x input-shape) cell — weak-type-correct, shardable, no
+device allocation (MULTI-POD DRY-RUN §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import sharding as shd
+from repro.models import registry
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg, shape):
+    gb, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((gb, s), jnp.int32),
+             "labels": _sds((gb, s), jnp.int32)}
+    if cfg.family == "audio":
+        # 50/50 encoder frames / decoder tokens (DESIGN.md §6)
+        se = s // 2
+        batch = {"tokens": _sds((gb, se), jnp.int32),
+                 "labels": _sds((gb, se), jnp.int32),
+                 "frames": _sds((gb, se, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = _sds((gb, cfg.num_patches, cfg.d_model),
+                                     jnp.bfloat16)
+    return batch
+
+
+def batch_shardings(batch, mesh):
+    return {k: shd.batch_sharding(mesh, v.ndim, v.shape[0])
+            for k, v in batch.items()}
+
+
+def decode_specs(cfg, shape):
+    """(tokens, cache, pos) abstract values for serve_step."""
+    gb, s = shape.global_batch, shape.seq_len
+    kw = {}
+    if cfg.family == "audio":
+        kw["enc_len"] = s // 2
+        s = s // 2
+    cache = registry.abstract_cache(cfg, gb, s, **kw)
+    tokens = _sds((gb, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return tokens, cache, pos
+
+
+def cache_shardings(cache, mesh):
+    return jax.tree_util.tree_map(
+        lambda x: shd.cache_sharding(mesh, x.shape), cache)
+
+
+def input_specs(arch: str, shape_name: str):
+    """Public entry: (cfg, shape, dict of abstract inputs)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        tokens, cache, pos = decode_specs(cfg, shape)
+        return cfg, shape, {"tokens": tokens, "cache": cache, "pos": pos}
+    return cfg, shape, train_batch_specs(cfg, shape)

@@ -1,0 +1,80 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b \
+        --smoke --steps 100 --batch 8 --seq 128 [--ckpt-dir ckpts/]
+
+``--smoke`` selects the reduced config (CPU-runnable). On a real TPU
+fleet the same entry point runs the full config on the production mesh
+(--mesh single|multi selects it; jax.distributed.initialize is called
+when JAX_COORDINATOR is set).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--s-max", type=float, default=None)
+    ap.add_argument("--step-size", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--data", default=None, help="memmap token file")
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force host platform device count")
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+    if os.environ.get("JAX_COORDINATOR"):
+        import jax
+        jax.distributed.initialize()   # multi-host fleet entry
+
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import make_source
+    from repro.distributed.context import DistContext
+    from repro.launch.mesh import make_production_mesh
+    from repro.optim import adamw
+    from repro.training import train_loop
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    overrides = {}
+    if args.s_max is not None:
+        overrides["s_max"] = args.s_max
+    if args.step_size is not None:
+        overrides["step_size"] = args.step_size
+    if overrides or cfg.blast.enabled:
+        cfg = dataclasses.replace(cfg, blast=dataclasses.replace(
+            cfg.blast, total_steps=args.steps, **overrides))
+
+    mesh = None
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+    dist = DistContext(mesh=mesh) if mesh else None
+
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    source = make_source(cfg, shape, path=args.data)
+    opt = adamw.AdamWConfig(peak_lr=args.lr, total_steps=args.steps,
+                            warmup_steps=max(args.steps // 20, 5))
+    loop = train_loop.TrainLoopConfig(
+        total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=max(args.steps // 5, 10))
+    state, history = train_loop.train(cfg, opt, source, loop, dist=dist)
+    print(f"done: final loss {history[-1]['loss']:.4f}, "
+          f"sparsity {history[-1]['sparsity']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,178 @@
+"""Attention: GQA/MHA with rope, sliding window, logit softcap, qk-norm,
+query-chunked computation (bounds the score transient to
+(chunk, S) — the memory behaviour a production TPU stack needs at 32k),
+decode with sequence-sharded KV caches, and optional cross-attention
+(whisper).
+
+Head padding: archs whose head count does not divide TP=16 declare
+``pad_heads_to``; extra heads are zero-initialised (wo rows zero ⇒ the
+padding is numerically exact) — DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rmsnorm, softcap
+from repro.models.params import ParamSpec
+
+NEG_INF = -1e30
+
+
+def eff_heads(cfg) -> tuple[int, int]:
+    """(q_heads, kv_heads) after TP padding."""
+    h = cfg.num_heads
+    kv = cfg.num_kv_heads
+    if cfg.pad_heads_to:
+        h = max(h, cfg.pad_heads_to)
+        if cfg.num_kv_heads == cfg.num_heads:     # MHA: pad kv too
+            kv = h
+    return h, kv
+
+
+def attn_param_specs(cfg, cross: bool = False) -> dict:
+    """ParamSpec dict for one attention block (stacked by caller)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = eff_heads(cfg)
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"),
+                        scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), init="zeros")
+        specs["bk"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                init="zeros")
+        specs["bv"] = ParamSpec((kv, hd), ("kv_heads", "head_dim"),
+                                init="zeros")
+    if cfg.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), init="zeros")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), init="zeros")
+    if cross:
+        # cross-attention re-uses wq/wo; K/V project from encoder states
+        specs = {k: v for k, v in specs.items()}
+    return specs
+
+
+def _project_qkv(cfg, p, x, kv_src=None):
+    """-> q (B,S,H,hd), k,v (B,Skv,KV,hd)."""
+    kv_src = x if kv_src is None else kv_src
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_src, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def _scores_to_out(cfg, q, k, v, q_pos, k_pos, causal, window):
+    """Grouped attention core. q: (B,Sq,H,hd); k/v: (B,Sk,KV,hd);
+    q_pos: (B,Sq); k_pos: (B,Sk) (for masking). Returns (B,Sq,H,hd).
+
+    Mixed precision WITHOUT materialising f32 copies of K/V: the dots
+    accumulate in f32 via preferred_element_type (a wholesale
+    cache->f32 convert was the #1 byte contributor of the decode
+    roofline — EXPERIMENTS.md §Perf iteration 1)."""
+    import os
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = cfg.attn_scale or 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, sq, kv, g, hd)
+    if os.environ.get("DRYRUN_BASELINE"):   # pre-optimization variant
+        logits = jnp.einsum("bqhgk,bshk->bhgqs", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+    else:
+        logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    mask = jnp.ones((b, sq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, :, None] >= k_pos[:, None, :]
+    if window:
+        mask &= q_pos[:, :, None] - k_pos[:, None, :] < window
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if os.environ.get("DRYRUN_BASELINE"):
+        out = jnp.einsum("bhgqs,bshk->bqhgk", probs,
+                         v.astype(jnp.float32))
+    else:
+        out = jnp.einsum("bhgqs,bshk->bqhgk", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def multihead_attention(cfg, p, x, positions, *, causal=True, window=0,
+                        q_chunk=1024, kv_src=None, kv_positions=None):
+    """Full (train/prefill/encoder) attention with query chunking.
+
+    Returns (out (B,S,D), (k, v)) — k/v returned so prefill can seed the
+    cache."""
+    q, k, v = _project_qkv(cfg, p, x, kv_src)
+    if cfg.rope_theta > 0 and kv_src is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if kv_positions is None
+                       else kv_positions, cfg.rope_theta)
+    kpos = positions if kv_positions is None else kv_positions
+    s = q.shape[1]
+    if s <= q_chunk or s % q_chunk != 0:
+        out = _scores_to_out(cfg, q, k, v, positions, kpos, causal, window)
+    else:
+        nch = s // q_chunk
+        qs = q.reshape(q.shape[0], nch, q_chunk, *q.shape[2:])
+        ps = positions.reshape(positions.shape[0], nch, q_chunk)
+        def chunk(carry, inp):
+            qc, pc = inp
+            oc = _scores_to_out(cfg, qc, k, v, pc, kpos, causal, window)
+            return carry, oc
+        # scan over chunks: transient is (B, q_chunk, S) not (B, S, S)
+        _, outs = jax.lax.scan(chunk, None,
+                               (qs.swapaxes(0, 1), ps.swapaxes(0, 1)))
+        out = outs.swapaxes(0, 1).reshape(q.shape)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, (k, v)
+
+
+def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window=0,
+                     cross=False):
+    """One-token decode. x: (B,1,D); cache_k/v: (B,Smax,KV,hd); ``pos``
+    scalar int32 — the index of the new token (synchronized batch).
+
+    For self-attention the new K/V is written at ``pos`` (functional
+    update); for cross-attention the cache is the (static) encoder memory.
+    Returns (out, new_cache_k, new_cache_v)."""
+    b = x.shape[0]
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if cross:
+        # encoder memory is already projected K/V; only project Q
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+        if cfg.qkv_bias:
+            q = q + p["bq"].astype(x.dtype)
+        if cfg.qk_norm:
+            q = rmsnorm(q, p["q_norm"])
+    else:
+        q, k, v = _project_qkv(cfg, p, x)
+        if cfg.rope_theta > 0:
+            q = apply_rope(q, posb, cfg.rope_theta)
+            k = apply_rope(k, posb, cfg.rope_theta)
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    smax = cache_k.shape[1]
+    kpos = jnp.broadcast_to(jnp.arange(smax, dtype=jnp.int32), (b, smax))
+    # causal mask at qpos==pos also masks the garbage cache tail
+    out = _scores_to_out(cfg, q, cache_k.astype(q.dtype),
+                         cache_v.astype(q.dtype), posb, kpos,
+                         causal=not cross, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v

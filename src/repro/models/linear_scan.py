@@ -1,0 +1,185 @@
+"""Chunked linear attention with per-channel (RWKV6) or per-head scalar
+(Mamba2/SSD) decay — the sub-quadratic token mixer for the SSM/hybrid
+architectures.
+
+Recurrence (per head, state S in R^{dk x dv}):
+
+    S_t = Diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = q_t S_{t-1} + (q_t ⊙ u) k_t^T v_t      (include_diag='bonus', RWKV)
+    y_t = q_t S_t                                 (include_diag='full', SSD)
+
+Chunked evaluation (chunk C): intra-chunk attention with decay weights +
+inter-chunk state carry, O(S·C·d) instead of O(S²·d) — and an exact O(1)
+recurrent step for decode.
+
+Numerics: the factorized intra-chunk form q·exp(Λ_t−mid) × k·exp(mid−Λ_s)
+is exact only while the centered exponents stay in f32 range. We enforce
+a per-step log-decay FLOOR of ``-RANGE/chunk`` (RANGE=70), so the total
+within-chunk decay is ≤ e^-70 and every centered exponent is ≤ 35 — no
+clamping of individual factors (two-sided clamping silently corrupts
+pairs where both sides bind; found by the exactness tests). The same
+floor is applied in the recurrent decode step, so train and decode
+numerics agree bit-for-bit in structure. A step decay below e^(-70/C)
+retains < 1e-30 over one chunk — the floor is vacuous in practice
+(DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RANGE = 70.0
+
+
+def decay_floor(chunk: int) -> float:
+    return -RANGE / max(chunk, 1)
+
+
+def _chunk(x, c):
+    b, s = x.shape[:2]
+    return x.reshape(b, s // c, c, *x.shape[2:])
+
+
+def chunked_linear_attention(q, k, v, log_w, *, u=None, chunk=64,
+                             initial_state=None, include_diag="full"):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); log_w: (B,S,H,dk) (<=0; per-head
+    scalar decays broadcast to dk); u: (H,dk) bonus or None.
+
+    Returns (y (B,S,H,dv), final_state (B,H,dk,dv))."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    log_w = jnp.maximum(log_w.astype(jnp.float32), decay_floor(c))
+    qc, kc, vc, wc = (_chunk(t, c) for t in (q, k, v, log_w))
+    lam = jnp.cumsum(wc, axis=2)                          # (B,N,C,H,dk)
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((c, c), bool),
+                   0 if include_diag == "full" else -1)
+
+    def step(state, inp):
+        q_c, k_c, v_c, lam_c, w_c = inp                   # (B,C,H,*)
+        q_c = q_c.astype(jnp.float32)
+        k_c = k_c.astype(jnp.float32)
+        v_c = v_c.astype(jnp.float32)
+        # decay of q_t relative to chunk start:
+        #   'bonus' (RWKV): y_t reads S_{t-1}  -> Λ_{t-1} = Λ_t − w_t
+        #   'full'  (SSD):  y_t reads S_t      -> Λ_t
+        lam_q = lam_c - (w_c if include_diag == "bonus" else 0.0)
+        # inter-chunk: y += (q ⊙ exp(Λ_q)) @ S0      (Λ_q ≤ 0: safe)
+        q_in = q_c * jnp.exp(lam_q)
+        y = jnp.einsum("bchk,bhkv->bchv", q_in, state)
+        # intra-chunk, mid-centered: |Λ − mid| ≤ RANGE/2 by the decay
+        # floor, so exp never overflows and no per-factor clamp exists.
+        mid = lam_c[:, c // 2, None]
+        qf = q_c * jnp.exp(lam_q - mid)
+        kf = k_c * jnp.exp(mid - lam_c)
+        a = jnp.einsum("bthk,bshk->bhts", qf, kf)
+        a = jnp.where(tri[None, None], a, 0.0)
+        y = y + jnp.einsum("bhts,bshv->bthv", a, v_c)
+        if u is not None:  # RWKV bonus: current token via u, not decay
+            diag = jnp.einsum("bthk,hk,bthk->bth", q_c,
+                              u.astype(jnp.float32), k_c)
+            y = y + diag[..., None] * v_c
+        # state carry: S1 = Diag(exp(Λ_C)) S0 + Σ_s Diag(exp(Λ_C−Λ_s)) kᵀv
+        lam_end = lam_c[:, -1]
+        k_out = k_c * jnp.exp(lam_end[:, None] - lam_c)
+        s1 = (jnp.exp(lam_end)[..., None] * state
+              + jnp.einsum("bshk,bshv->bhkv", k_out, v_c))
+        return s1, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (qc, kc, vc, lam, wc))
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dv)
+    return y.astype(q.dtype), final
+
+
+def chunked_ssd(q, k, v, log_a, *, chunk=64, initial_state=None):
+    """Grouped SSD (Mamba2, n_groups=1): q,k are SHARED across heads and
+    the decay is a per-head SCALAR — so nothing of shape (B,S,H,d_state)
+    is ever materialised (the broadcast in the generic path was the #1
+    byte contributor of the zamba2 roofline — EXPERIMENTS.md §Perf).
+
+    q,k: (B,S,ds); v: (B,S,H,hd); log_a: (B,S,H) (<=0).
+    Returns (y (B,S,H,hd), state (B,H,ds,hd)).
+
+    Per-head exponents are applied as full (C,C) decay matrices with
+    exponent Λ_t−Λ_s ≤ 0 — no factorization, no overflow, no clamping."""
+    b, s, ds = q.shape
+    h, hd = v.shape[2], v.shape[3]
+    c = min(chunk, s)
+    assert s % c == 0
+    # NO decay floor here: the decay matrices are computed directly with
+    # exponents Λ_t−Λ_s ≤ 0, so nothing can overflow (unlike the
+    # factorized per-channel path above).
+    qc, kc, vc, ac = (_chunk(t, c) for t in (q, k, v, log_a.astype(jnp.float32)))
+    lam = jnp.cumsum(ac, axis=2)                      # (B,N,C,H)
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, ds, hd), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(state, inp):
+        q_c, k_c, v_c, lam_c = inp                    # (B,C,*)
+        q_c = q_c.astype(jnp.float32)
+        k_c = k_c.astype(jnp.float32)
+        v_c = v_c.astype(jnp.float32)
+        # inter-chunk: y[b,t,h,v] = exp(Λ_t^h) Σ_d q_td S0[h,d,v]
+        y = jnp.einsum("btd,bhdv->bthv", q_c, state) \
+            * jnp.exp(lam_c)[..., None]
+        # intra-chunk: A0 shared across heads, per-head decay matrix
+        a0 = jnp.einsum("btd,bsd->bts", q_c, k_c)      # (B,C,C)
+        dec = jnp.exp(lam_c[:, :, None] - lam_c[:, None, :, :])
+        a = a0[:, :, :, None] * jnp.where(tri[None, :, :, None], dec, 0.)
+        y = y + jnp.einsum("btsh,bshv->bthv", a, v_c)
+        # state: S1 = exp(Λ_C) S0 + Σ_s k_s ⊗ (v_s exp(Λ_C−Λ_s))
+        lam_end = lam_c[:, -1]                        # (B,H)
+        vdec = v_c * jnp.exp(lam_end[:, None] - lam_c)[..., None]
+        s1 = (jnp.exp(lam_end)[..., None, None] * state
+              + jnp.einsum("bsd,bshv->bhdv", k_c, vdec))
+        return s1, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (qc, kc, vc, lam))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.swapaxes(0, 1).reshape(b, s, h, hd).astype(v.dtype), final
+
+
+def ssd_recurrent_step(q, k, v, log_a, state, *, chunk=64):
+    """Grouped-SSD decode step. q,k: (B,ds); v: (B,H,hd);
+    log_a: (B,H); state: (B,H,ds,hd)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    kv = k.astype(jnp.float32)[:, None, :, None] \
+        * v.astype(jnp.float32)[:, :, None, :]         # (B,H,ds,hd)
+    new_state = a[..., None, None] * state + kv
+    y = jnp.einsum("bd,bhdv->bhv", q.astype(jnp.float32), new_state)
+    return y.astype(v.dtype), new_state
+
+
+def recurrent_step(q, k, v, log_w, state, *, u=None, chunk=64,
+                   include_diag="full"):
+    """Exact single-token recurrence for decode (same decay floor as the
+    chunked path, keyed by the training ``chunk``).
+
+    q,k: (B,H,dk); v: (B,H,dv); log_w: (B,H,dk); state: (B,H,dk,dv).
+    Returns (y (B,H,dv), new_state)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    w = jnp.exp(jnp.maximum(log_w.astype(jnp.float32),
+                            decay_floor(min(chunk, 1 << 30))))
+    kv = kf[..., :, None] * vf[..., None, :]              # (B,H,dk,dv)
+    if include_diag == "bonus":
+        y = jnp.einsum("bhk,bhkv->bhv", qf, state)
+        y = y + jnp.einsum("bhk,hk,bhkv->bhv", qf,
+                           u.astype(jnp.float32), kv)
+        new_state = w[..., None] * state + kv
+    else:
+        new_state = w[..., None] * state + kv
+        y = jnp.einsum("bhk,bhkv->bhv", qf, new_state)
+    return y.astype(q.dtype), new_state

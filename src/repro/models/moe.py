@@ -1,0 +1,142 @@
+"""Mixture-of-Experts layer (gshard-style top-k with capacity), designed
+for expert parallelism over the ``model`` mesh axis via shard_map
+(DESIGN.md §4): tokens are replicated across the model axis, each shard
+runs its local experts with a static capacity, partial outputs are
+psum-combined. Static shapes, perfectly balanced per-shard work.
+
+BLaST applies per-expert block masks to the expert weights (paper §2.2:
+MoE is the functional equivariant of the MLP).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_mlp as sm
+from repro.models.params import ParamSpec
+
+
+def moe_param_specs(cfg) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    specs = {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", "ff")),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", "ff")),
+        "w_down": ParamSpec((e, f, d), ("experts", "ff", "embed"),
+                            scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.moe_d_ff * cfg.num_shared_experts
+        specs.update({
+            "ws_gate": ParamSpec((d, fs), ("embed", None)),
+            "ws_up": ParamSpec((d, fs), ("embed", None)),
+            "ws_down": ParamSpec((fs, d), (None, "embed"),
+                                 scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+        })
+    return specs
+
+
+def capacity(cfg, n_tokens: int) -> int:
+    """Static per-expert capacity (GShard)."""
+    c = math.ceil(cfg.top_k * n_tokens * cfg.capacity_factor
+                  / cfg.num_experts)
+    return max(c, 1)
+
+
+def route(cfg, x_flat: jax.Array, router: jax.Array):
+    """-> (top_vals (T,k) f32 normalized, top_idx (T,k) i32, aux_loss)."""
+    logits = (x_flat.astype(jnp.float32) @ router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, cfg.top_k)
+    top_vals = top_vals / jnp.maximum(
+        top_vals.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    e = cfg.num_experts
+    hits = jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32)
+    aux = e * jnp.mean(hits.mean(0) * probs.mean(0)) * e
+    return top_vals, top_idx, aux
+
+
+def local_expert_forward(cfg, x_flat, top_vals, top_idx, w_gate, w_up,
+                         w_down, masks=None, expert_offset=0):
+    """Compute the contribution of ``E_local`` experts (a shard's slice)
+    to every token. All shapes static; runs identically under shard_map
+    (with expert_offset = axis_index * E_local) and on a single device
+    (offset 0, E_local = E).
+
+    x_flat: (T, D); w_*: (E_l, D, F) / (E_l, F, D). Returns (T, D)."""
+    t = x_flat.shape[0]
+    packed = sm._is_packed(w_gate)
+    e_l = w_gate.idx.shape[0] if packed else w_gate.shape[0]
+    c = capacity(cfg, t)
+    spec = cfg.blast
+    if masks is not None and spec.enabled and not packed:
+        w_gate = sm.apply_mask_ste(w_gate, masks["w_gate"], spec.b_in,
+                                   spec.b_out)
+        w_up = sm.apply_mask_ste(w_up, masks["w_up"], spec.b_in,
+                                 spec.b_out)
+        w_down = sm.apply_mask_ste(w_down, masks["w_down"], spec.b_out,
+                                   spec.b_in)
+
+    local_ids = expert_offset + jnp.arange(e_l)
+    onehot = top_idx[:, :, None] == local_ids          # (T, k, E_l)
+    gate = (top_vals[:, :, None] * onehot).sum(1)      # (T, E_l) f32
+    hit = onehot.any(1)                                # (T, E_l)
+    # per-expert token lists: kept tokens first, capped at capacity
+    order = jnp.argsort(~hit, axis=0, stable=True)[:c]          # (C, E_l)
+    valid = jnp.take_along_axis(hit, order, axis=0)             # (C, E_l)
+    idx = jnp.where(valid, order, 0).T.astype(jnp.int32)        # (E_l, C)
+    valid = valid.T                                             # (E_l, C)
+
+    xe = jnp.take(x_flat, idx, axis=0)                          # (E_l,C,D)
+    if packed:
+        from repro.kernels import ops
+        ye = jax.vmap(lambda x2, pg, pu, pd: ops.sparse_mlp_apply(
+            x2, pg, pu, pd, act=cfg.mlp_act))(xe, w_gate, w_up, w_down)
+    else:
+        h = sm.act_fn(cfg.mlp_act)(
+            jnp.einsum("ecd,edf->ecf", xe, w_gate.astype(xe.dtype))
+        ) * jnp.einsum("ecd,edf->ecf", xe, w_up.astype(xe.dtype))
+        ye = jnp.einsum("ecf,efd->ecd", h, w_down.astype(xe.dtype))
+    gate_ec = jnp.take_along_axis(gate.T, idx, axis=1)          # (E_l, C)
+    ye = ye * (gate_ec * valid)[..., None].astype(ye.dtype)
+    out = jnp.zeros_like(x_flat)
+    out = out.at[idx.reshape(-1)].add(ye.reshape(-1, ye.shape[-1]))
+    return out
+
+
+def shared_expert_forward(cfg, x, p, masks=None):
+    """Replicated shared experts (deepseek) — a plain GLU MLP."""
+    mm = None
+    if masks is not None and cfg.blast.enabled:
+        mm = {"w_gate": masks.get("ws_gate"), "w_up": masks.get("ws_up"),
+              "w_down": masks.get("ws_down")}
+    return sm.glu_mlp(x, p["ws_gate"], p["ws_up"], p["ws_down"],
+                      act=cfg.mlp_act, masks=mm, spec=cfg.blast)
+
+
+def moe_forward(cfg, p, x, masks=None, axis_name: str | None = None):
+    """Full MoE layer. x: (B, S, D).
+
+    ``axis_name``: if set, we are inside shard_map — p["w_*"] are the
+    LOCAL expert slices and the result is psum'd by the caller; router is
+    replicated. If None: single-device (all experts local)."""
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+    top_vals, top_idx, aux = route(cfg, x_flat, p["router"])
+    e_l = (p["w_gate"].idx.shape[0] if sm._is_packed(p["w_gate"])
+           else p["w_gate"].shape[0])
+    off = 0
+    if axis_name is not None:
+        off = jax.lax.axis_index(axis_name) * e_l
+    y = local_expert_forward(cfg, x_flat, top_vals.astype(x.dtype),
+                             top_idx, p["w_gate"], p["w_up"], p["w_down"],
+                             masks=masks, expert_offset=off)
+    if axis_name is not None:
+        y = jax.lax.psum(y, axis_name)
+        aux = aux  # router replicated: aux identical on all shards
+    if cfg.num_shared_experts:
+        y = y + shared_expert_forward(cfg, x, p, masks).reshape(-1, d)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,70 @@
+"""Parameter declaration system: one source of truth per model for
+(shape, dtype, init, logical sharding axes).
+
+From a ``ParamSpec`` tree we derive, without duplication:
+  * real initialization (``init_params``),
+  * allocation-free abstract params for the dry-run (``abstract_params``),
+  * ``PartitionSpec`` trees via the logical-axis rules in
+    ``distributed/sharding.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Initializer = Callable[[jax.Array, tuple, jnp.dtype], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names per dim
+    init: str = "normal"                  # normal|zeros|ones|embed
+    scale: float = 1.0                    # fan-in scaling multiplier
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(rng: jax.Array, spec: ParamSpec) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "embed":
+        return (jax.random.normal(rng, spec.shape, jnp.float32)
+                * 0.02 * spec.scale).astype(dt)
+    # fan-in scaled normal (last-but-one dim is fan-in for matrices)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    std = spec.scale / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(rng, spec.shape, jnp.float32) * std
+            ).astype(dt)
+
+
+def init_params(specs: dict, rng: jax.Array) -> dict:
+    """Materialize a (nested) ParamSpec tree into arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    rngs = jax.random.split(rng, len(leaves))
+    vals = [_init_leaf(r, s) for r, s in zip(rngs, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(specs: dict) -> dict:
+    """ShapeDtypeStruct tree — no allocation (dry-run path)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def axes_tree(specs: dict) -> dict:
+    """Logical-axes tree parallel to the params tree."""
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))

@@ -1,0 +1,219 @@
+"""RWKV6 "Finch" (arXiv:2404.05892): attention-free LM with
+data-dependent per-channel decay.
+
+Per layer: time-mix (the token mixer — chunked linear attention from
+``linear_scan.py``, heads of 64) and channel-mix (the MLP analogue:
+square-ReLU two-matrix MLP — this is where BLaST applies).
+
+Simplifications vs the reference (DESIGN.md §8): static token-shift
+interpolation weights (mu) instead of the data-dependent ddlerp; the
+data-dependent decay LoRA (the defining Finch feature) IS implemented.
+Heads are zero-padded 40→48 for TP divisibility.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_mlp as sm
+from repro.models.layers import layernorm
+from repro.models.linear_scan import (chunked_linear_attention,
+                                      recurrent_step)
+from repro.models.params import ParamSpec
+
+LORA_RANK = 64
+
+
+def _heads(cfg):
+    h = max(cfg.num_heads, cfg.pad_heads_to or 0)
+    return h, cfg.head_dim, h * cfg.head_dim   # (H, dk, inner)
+
+
+def layer_param_specs(cfg) -> dict:
+    d = cfg.d_model
+    h, dk, inner = _heads(cfg)
+    f = cfg.d_ff
+    out_scale = 1.0 / math.sqrt(2 * cfg.num_layers)
+    return {
+        "ln1_scale": ParamSpec((d,), ("embed",), init="ones"),
+        "ln1_bias": ParamSpec((d,), ("embed",), init="zeros"),
+        "ln2_scale": ParamSpec((d,), ("embed",), init="ones"),
+        "ln2_bias": ParamSpec((d,), ("embed",), init="zeros"),
+        "tmix": {
+            "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_v": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_g": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_w": ParamSpec((d,), ("embed",), init="zeros"),
+            "w_r": ParamSpec((d, h, dk), ("embed", "heads", "head_dim")),
+            "w_k": ParamSpec((d, h, dk), ("embed", "heads", "head_dim")),
+            "w_v": ParamSpec((d, h, dk), ("embed", "heads", "head_dim")),
+            "w_g": ParamSpec((d, h, dk), ("embed", "heads", "head_dim")),
+            "w_o": ParamSpec((h, dk, d), ("heads", "head_dim", "embed"),
+                             scale=out_scale),
+            # data-dependent decay: w = w0 + tanh(x A) B   (Finch LoRA)
+            "w0": ParamSpec((h, dk), ("heads", "head_dim"), init="zeros"),
+            "lora_a": ParamSpec((d, LORA_RANK), ("embed", None)),
+            "lora_b": ParamSpec((LORA_RANK, h, dk),
+                                (None, "heads", "head_dim")),
+            "u": ParamSpec((h, dk), ("heads", "head_dim"), init="zeros"),
+            "ln_x_scale": ParamSpec((h, dk), ("heads", "head_dim"),
+                                    init="ones"),
+        },
+        "mlp": {
+            "mu_k": ParamSpec((d,), ("embed",), init="zeros"),
+            "mu_r": ParamSpec((d,), ("embed",), init="zeros"),
+            "w_in": ParamSpec((d, f), ("embed", "ff")),
+            "w_out": ParamSpec((f, d), ("ff", "embed"), scale=out_scale),
+            "w_recept": ParamSpec((d, d), ("embed", "embed2")),
+        },
+    }
+
+
+def param_specs(cfg) -> dict:
+    from repro.models.transformer import _norm_specs, _stack_specs
+    specs = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                           ("vocab", "embed"), init="embed"),
+        "layers": _stack_specs(layer_param_specs(cfg), cfg.num_layers),
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size),
+                             ("embed", "vocab"), init="embed"),
+    }
+    specs.update(_norm_specs(cfg, "ln_f"))
+    return specs
+
+
+def sparse_paths(cfg) -> list[str]:
+    return ["layers/mlp/w_in", "layers/mlp/w_out"]
+
+
+def dense_layer_flags(cfg):
+    idx = jnp.arange(cfg.num_layers)
+    return idx >= (cfg.num_layers - cfg.blast.dense_last)
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` at t=0). x: (B,S,D)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def time_mix(cfg, p, x, *, state=None, x_last=None, decode=False):
+    """x: (B,S,D). Returns (y, (new_state, new_x_last))."""
+    b, s, d = x.shape
+    h, dk, inner = _heads(cfg)
+    xs = _shift(x, x_last)
+    r = jnp.einsum("bsd,dhk->bshk", _mix(x, xs, p["mu_r"]), p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", _mix(x, xs, p["mu_k"]), p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", _mix(x, xs, p["mu_v"]), p["w_v"].astype(x.dtype))
+    g = jnp.einsum("bsd,dhk->bshk", _mix(x, xs, p["mu_g"]), p["w_g"].astype(x.dtype))
+    xw = _mix(x, xs, p["mu_w"])
+    lora = jnp.einsum("bsr,rhk->bshk",
+                      jnp.tanh(xw @ p["lora_a"].astype(x.dtype)),
+                      p["lora_b"].astype(x.dtype))
+    log_w = -jnp.exp(jnp.clip(
+        p["w0"].astype(jnp.float32) + lora.astype(jnp.float32), -8., 4.))
+    if decode:
+        y, new_state = recurrent_step(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], state,
+            u=p["u"], chunk=cfg.chunk_size, include_diag="bonus")
+        y = y[:, None]
+    else:
+        y, new_state = chunked_linear_attention(
+            r, k, v, log_w, u=p["u"], chunk=cfg.chunk_size,
+            initial_state=state, include_diag="bonus")
+    # per-head groupnorm, then gate
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 64e-5)
+    yf = yf * p["ln_x_scale"].astype(jnp.float32)
+    y = (yf.astype(x.dtype) * jax.nn.silu(g))
+    out = jnp.einsum("bshk,hkd->bsd", y, p["w_o"].astype(x.dtype))
+    return out, (new_state, x[:, -1])
+
+
+def channel_mix(cfg, p, x, masks=None, x_last=None):
+    """Square-ReLU channel mix — the BLaST-sparse MLP."""
+    xs = _shift(x, x_last)
+    xk = _mix(x, xs, p["mu_k"])
+    xr = _mix(x, xs, p["mu_r"])
+    y = sm.mlp2(xk, p["w_in"], p["w_out"], act="relu", masks=masks,
+                spec=cfg.blast, square=True)
+    recept = jax.nn.sigmoid(xr @ p["w_recept"].astype(x.dtype))
+    return recept * y, x[:, -1]
+
+
+def forward(cfg, params, tokens, *, masks=None, dist=None, **_):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    from repro.models.transformer import _layer_masks, logits_from_hidden
+    if dist is not None:
+        x = dist.constrain_seq(x)
+    lmasks = _layer_masks(masks, "layers")
+
+    def body(carry, xs_):
+        x, aux = carry
+        p_l, m_l = xs_
+        h = layernorm(x, p_l["ln1_scale"], p_l["ln1_bias"])
+        a, _ = time_mix(cfg, p_l["tmix"], h)
+        x = x + a
+        h = layernorm(x, p_l["ln2_scale"], p_l["ln2_bias"])
+        m, _ = channel_mix(cfg, p_l["mlp"], h, masks=m_l)
+        x = x + m
+        if dist is not None:
+            x = dist.constrain_seq(x)
+        return (x, aux), None
+
+    if cfg.remat:
+        from repro.models.layers import remat_policy
+        body = jax.checkpoint(body, policy=remat_policy(cfg))
+    (x, _), _ = jax.lax.scan(body, (x, 0.0), (params["layers"], lmasks))
+    return logits_from_hidden(cfg, params, x, dist), 0.0
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    h, dk, _ = _heads(cfg)
+    L = cfg.num_layers
+    return {
+        "state": jnp.zeros((L, batch, h, dk, dk), jnp.float32),
+        "x_tmix": jnp.zeros((L, batch, cfg.d_model), dtype),
+        "x_cmix": jnp.zeros((L, batch, cfg.d_model), dtype),
+    }
+
+
+def abstract_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype))
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    from repro.models.transformer import _layer_masks, logits_from_hidden
+    lmasks = _layer_masks(masks, "layers")
+
+    def body(carry, xs_):
+        x, = carry
+        p_l, m_l, st, xt, xc = xs_
+        h = layernorm(x, p_l["ln1_scale"], p_l["ln1_bias"])
+        a, (new_st, new_xt) = time_mix(cfg, p_l["tmix"], h,
+                                       state=st, x_last=xt, decode=True)
+        x = x + a
+        h = layernorm(x, p_l["ln2_scale"], p_l["ln2_bias"])
+        m, new_xc = channel_mix(cfg, p_l["mlp"], h, masks=m_l, x_last=xc)
+        return (x + m,), (new_st, new_xt.astype(xt.dtype),
+                          new_xc.astype(xc.dtype))
+
+    (x,), (st, xt, xc) = jax.lax.scan(
+        body, (x,), (params["layers"], lmasks, cache["state"],
+                     cache["x_tmix"], cache["x_cmix"]))
+    new_cache = {"state": st, "x_tmix": xt, "x_cmix": xc}
+    return logits_from_hidden(cfg, params, x), new_cache

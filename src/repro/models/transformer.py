@@ -1,0 +1,329 @@
+"""Generic decoder-only Transformer LM covering the dense / MoE / VLM
+families (stablelm-3b/12b, qwen2-7b, gemma2-27b, qwen3-moe, deepseek-moe,
+internvl2-2b, and the paper's GPT-2 / Llama configs).
+
+Layers are scanned (stacked params, single compiled body — compile time
+independent of depth). gemma2's local/global alternating pattern scans
+(local, global) PAIRS. BLaST masks ride along as stacked scan inputs.
+
+Decode uses per-layer KV caches stacked on the layer axis; caches shard
+their sequence dim over the ``model`` axis so a 1.6 TB gemma2 32k-batch
+cache fits (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_mlp as sm
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import norm, softcap
+from repro.models.params import ParamSpec
+
+
+# -------------------------------------------------------------- param spec
+def _norm_specs(cfg, name):
+    d = {name + "_scale": ParamSpec((cfg.d_model,), ("embed",),
+                                    init="zeros" if cfg.norm_kind ==
+                                    "rmsnorm" else "ones")}
+    if cfg.norm_kind == "layernorm":
+        d[name + "_bias"] = ParamSpec((cfg.d_model,), ("embed",),
+                                      init="zeros")
+    return d
+
+
+def mlp_param_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    down_scale = 1.0 / math.sqrt(2 * cfg.num_layers)
+    if cfg.is_moe:
+        return moe_mod.moe_param_specs(cfg)
+    if cfg.mlp_kind == "glu":
+        return {
+            "w_gate": ParamSpec((d, f), ("embed", "ff")),
+            "w_up": ParamSpec((d, f), ("embed", "ff")),
+            "w_down": ParamSpec((f, d), ("ff", "embed"), scale=down_scale),
+        }
+    return {
+        "w_in": ParamSpec((d, f), ("embed", "ff")),
+        "b_in": ParamSpec((f,), ("ff",), init="zeros"),
+        "w_out": ParamSpec((f, d), ("ff", "embed"), scale=down_scale),
+        "b_out": ParamSpec((d,), ("embed",), init="zeros"),
+    }
+
+
+def layer_param_specs(cfg) -> dict:
+    specs = {}
+    specs.update(_norm_specs(cfg, "ln_attn"))
+    specs.update({"attn": attn.attn_param_specs(cfg)})
+    specs.update(_norm_specs(cfg, "ln_mlp"))
+    specs.update({"mlp": mlp_param_specs(cfg)})
+    return specs
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    """Prepend a stacked 'layers' dim to every leaf."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes,
+                         init=s.init, scale=s.scale, dtype=s.dtype)
+    return jax.tree_util.tree_map(
+        f, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def n_stacks(cfg) -> tuple[int, int]:
+    """(stack length, layers per scan step)."""
+    if cfg.layer_pattern == "local_global":
+        assert cfg.num_layers % 2 == 0
+        return cfg.num_layers // 2, 2
+    return cfg.num_layers, 1
+
+
+def param_specs(cfg) -> dict:
+    ns, per = n_stacks(cfg)
+    specs: dict[str, Any] = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model),
+                           ("vocab", "embed"), init="embed"),
+    }
+    if cfg.layer_pattern == "local_global":
+        specs["layers_local"] = _stack_specs(layer_param_specs(cfg), ns)
+        specs["layers_global"] = _stack_specs(layer_param_specs(cfg), ns)
+    else:
+        specs["layers"] = _stack_specs(layer_param_specs(cfg), ns)
+    specs.update(_norm_specs(cfg, "ln_f"))
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"), init="embed")
+    del per
+    return specs
+
+
+def sparse_paths(cfg) -> list[str]:
+    """Mask-tree paths of BLaST-sparsified weights (stacked)."""
+    stacks = (["layers_local", "layers_global"]
+              if cfg.layer_pattern == "local_global" else ["layers"])
+    if cfg.is_moe:
+        leaves = ["mlp/w_gate", "mlp/w_up", "mlp/w_down"]
+        if cfg.num_shared_experts:
+            leaves += ["mlp/ws_gate", "mlp/ws_up", "mlp/ws_down"]
+    elif cfg.mlp_kind == "glu":
+        leaves = ["mlp/w_gate", "mlp/w_up", "mlp/w_down"]
+    else:
+        leaves = ["mlp/w_in", "mlp/w_out"]
+    return [f"{s}/{leaf}" for s in stacks for leaf in leaves]
+
+
+def dense_layer_flags(cfg) -> jax.Array:
+    """(stack,) bool — True where the MLP stays dense (last L layers,
+    paper §5.4.4). For paired stacks the flag covers the pair."""
+    ns, per = n_stacks(cfg)
+    n_dense = math.ceil(cfg.blast.dense_last / per)
+    idx = jnp.arange(ns)
+    return idx >= (ns - n_dense)
+
+
+# ----------------------------------------------------------------- forward
+def _layer_masks(masks: dict | None, stack: str) -> dict | None:
+    if not masks:
+        return None
+    prefix = stack + "/mlp/"
+    out = {k[len(prefix):]: v for k, v in masks.items()
+           if k.startswith(prefix)}
+    return out or None
+
+
+def _moe_shardmap(cfg, p, x, masks, dist):
+    """EP over the model axis: tokens replicated across 'model', local
+    experts per shard, psum combine (DESIGN.md §4)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.context import shard_map
+    ma = dist.model_axis
+    bp = dist.batch_pspec(3)
+    rep = P()
+    p_specs = {k: (P(ma, None, None) if k in ("w_gate", "w_up", "w_down")
+                   else rep) for k in p}
+    if masks:
+        m_specs = {k: (P(ma, None, None)
+                       if k in ("w_gate", "w_up", "w_down") else rep)
+                   for k in masks}
+    else:
+        m_specs = None
+
+    def body(x_l, p_l, m_l):
+        y, aux = moe_mod.moe_forward(cfg, p_l, x_l, masks=m_l,
+                                     axis_name=ma)
+        if dist.batch_axes:
+            aux = jax.lax.pmean(aux, dist.batch_axes)
+        return y, aux
+
+    y, aux = shard_map(body, mesh=dist.mesh,
+                       in_specs=(bp, p_specs, m_specs),
+                       out_specs=(bp, rep), check_vma=False)(x, p, masks)
+    return y, aux
+
+
+def mlp_forward(cfg, p, x, masks, dist=None):
+    if cfg.is_moe:
+        if dist is not None and dist.mesh is not None \
+                and not dist.inside_shard_map:
+            return _moe_shardmap(cfg, p, x, masks, dist)
+        axis = dist.model_axis if (dist and dist.inside_shard_map) else None
+        y, aux = moe_mod.moe_forward(cfg, p, x, masks=masks,
+                                     axis_name=axis)
+        return y, aux
+    if cfg.mlp_kind == "glu":
+        y = sm.glu_mlp(x, p["w_gate"], p["w_up"], p["w_down"],
+                       act=cfg.mlp_act, masks=masks, spec=cfg.blast)
+    else:
+        y = sm.mlp2(x, p["w_in"], p["w_out"], p.get("b_in"),
+                    p.get("b_out"), act=cfg.mlp_act, masks=masks,
+                    spec=cfg.blast)
+    return y, 0.0
+
+
+def _block(cfg, p, x, positions, masks, *, window, dist=None):
+    """One pre-norm transformer block (full attention)."""
+    h = norm(cfg.norm_kind, x, p["ln_attn_scale"], p.get("ln_attn_bias"))
+    a, _ = attn.multihead_attention(cfg, p["attn"], h, positions,
+                                    causal=True, window=window)
+    x = x + a
+    h = norm(cfg.norm_kind, x, p["ln_mlp_scale"], p.get("ln_mlp_bias"))
+    m, aux = mlp_forward(cfg, p["mlp"], h, masks, dist)
+    return x + m, aux
+
+
+def embed_inputs(cfg, params, tokens, patch_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if cfg.scale_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    if patch_embeds is not None and cfg.num_patches:
+        p = patch_embeds.astype(x.dtype)
+        x = jnp.concatenate([p, x[:, cfg.num_patches:]], axis=1)
+    return x
+
+
+def logits_from_hidden(cfg, params, x, dist=None):
+    xf = norm(cfg.norm_kind, x, params["ln_f_scale"],
+              params.get("ln_f_bias"))
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", xf, head.astype(xf.dtype))
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    if dist is not None:
+        logits = dist.constrain_logits(logits)
+    return logits
+
+
+def forward(cfg, params, tokens, *, masks=None, patch_embeds=None,
+            dist=None):
+    """Training/prefill forward -> (logits (B,S,V) f32, aux_loss)."""
+    b, s = tokens.shape
+    x = embed_inputs(cfg, params, tokens, patch_embeds)
+    if dist is not None:
+        x = dist.constrain_seq(x)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, xs):
+        x, aux = carry
+        if cfg.layer_pattern == "local_global":
+            p_loc, m_loc, p_glb, m_glb = xs
+            x, a1 = _block(cfg, p_loc, x, positions, m_loc,
+                           window=cfg.sliding_window, dist=dist)
+            x, a2 = _block(cfg, p_glb, x, positions, m_glb,
+                           window=0, dist=dist)
+            if dist is not None:
+                x = dist.constrain_seq(x)
+            return (x, aux + a1 + a2), None
+        p_l, m_l = xs
+        x, a = _block(cfg, p_l, x, positions, m_l,
+                      window=cfg.sliding_window, dist=dist)
+        if dist is not None:
+            x = dist.constrain_seq(x)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        from repro.models.layers import remat_policy
+        body = jax.checkpoint(body, policy=remat_policy(cfg))
+
+    if cfg.layer_pattern == "local_global":
+        xs = (params["layers_local"], _layer_masks(masks, "layers_local"),
+              params["layers_global"], _layer_masks(masks, "layers_global"))
+    else:
+        xs = (params["layers"], _layer_masks(masks, "layers"))
+    (x, aux), _ = jax.lax.scan(body, (x, 0.0), xs)
+    return logits_from_hidden(cfg, params, x, dist), aux
+
+
+# ------------------------------------------------------------------ decode
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ns, per = n_stacks(cfg)
+    _, kv = attn.eff_heads(cfg)
+    shape = (ns * per, batch, max_len, kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def abstract_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    ns, per = n_stacks(cfg)
+    _, kv = attn.eff_heads(cfg)
+    shape = (ns * per, batch, max_len, kv, cfg.head_dim)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None):
+    """One decode step. tokens: (B,1); pos: scalar int32 index.
+
+    Returns (logits (B,1,V), new_cache)."""
+    x = embed_inputs(cfg, params, tokens)
+
+    def body(carry, xs):
+        x, aux = carry
+        if cfg.layer_pattern == "local_global":
+            p_loc, m_loc, p_glb, m_glb, ck, cv = xs
+            out = []
+            for i, (p_l, m_l, win) in enumerate(
+                    ((p_loc, m_loc, cfg.sliding_window), (p_glb, m_glb, 0))):
+                h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
+                         p_l.get("ln_attn_bias"))
+                a, nk, nv = attn.decode_attention(
+                    cfg, p_l["attn"], h, ck[i], cv[i], pos, window=win)
+                x = x + a
+                h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
+                         p_l.get("ln_mlp_bias"))
+                m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
+                x = x + m
+                aux = aux + al
+                out.append((nk, nv))
+            nk = jnp.stack([out[0][0], out[1][0]])
+            nv = jnp.stack([out[0][1], out[1][1]])
+            return (x, aux), (nk, nv)
+        p_l, m_l, ck, cv = xs
+        h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
+                 p_l.get("ln_attn_bias"))
+        a, nk, nv = attn.decode_attention(
+            cfg, p_l["attn"], h, ck, cv, pos,
+            window=cfg.sliding_window)
+        x = x + a
+        h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
+                 p_l.get("ln_mlp_bias"))
+        m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
+        return (x + m, aux + al), (nk, nv)
+
+    ns, per = n_stacks(cfg)
+    if cfg.layer_pattern == "local_global":
+        ck = cache["k"].reshape(ns, per, *cache["k"].shape[1:])
+        cv = cache["v"].reshape(ns, per, *cache["v"].shape[1:])
+        xs = (params["layers_local"], _layer_masks(masks, "layers_local"),
+              params["layers_global"], _layer_masks(masks, "layers_global"),
+              ck, cv)
+    else:
+        xs = (params["layers"], _layer_masks(masks, "layers"),
+              cache["k"], cache["v"])
+    (x, _), (nk, nv) = jax.lax.scan(body, (x, 0.0), xs)
+    new_cache = {"k": nk.reshape(cache["k"].shape),
+                 "v": nv.reshape(cache["v"].shape)}
+    return logits_from_hidden(cfg, params, x), new_cache

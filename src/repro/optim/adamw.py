@@ -1,0 +1,111 @@
+"""AdamW from scratch (no optax in the container), sparse-aware:
+
+  * global-norm gradient clipping;
+  * decoupled weight decay (skipped for 1-D params: norms/biases);
+  * BLaST integration — gradients are pre-masked by the caller, and the
+    first/second moments of REGROWN blocks are reset to zero (RigL
+    semantics; keeps stale momentum from instantly re-inflating blocks
+    the sparsifier just zero-initialised).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def lr_at(c: AdamWConfig, step) -> jax.Array:
+    """Linear warmup + cosine decay to end_lr_frac * peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = c.peak_lr * step / max(c.warmup_steps, 1)
+    frac = jnp.clip((step - c.warmup_steps)
+                    / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = c.peak_lr * (c.end_lr_frac + (1 - c.end_lr_frac)
+                       * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(step < c.warmup_steps, warm, cos)
+
+
+def init(params) -> dict:
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def update(c: AdamWConfig, grads, opt_state, params, step):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, c.grad_clip)
+    lr = lr_at(c, step)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    bc1 = 1.0 - c.b1 ** t
+    bc2 = 1.0 - c.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = c.b1 * m + (1 - c.b1) * g
+        v = c.b2 * v + (1 - c.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + c.eps)
+        if p.ndim >= 2:   # decoupled wd, matrices only
+            delta = delta + c.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm, "lr": lr}
+
+
+def mask_moments(opt_state, masks: dict, spec):
+    """Zero the Adam moments of every PRUNED block (RigL semantics).
+
+    Without this, the moment history of a freshly-pruned block keeps
+    pushing its (zeroed) weight off zero at the next update even though
+    the masked gradient is zero — found by the train-system invariant
+    test. Grown blocks are covered too: they were pruned before, so
+    their moments are already zero."""
+    from repro.core import sparse_mlp as sm
+    from repro.core import topk
+    new = opt_state
+    for which in ("m", "v"):
+        tree = new[which]
+        for path, mask in masks.items():
+            leaf = sm.get_path(tree, path)
+            bi, bo = sm.block_dims_for(spec, path)
+            keep = topk.expand_mask(mask, bi, bo).astype(jnp.float32)
+            tree = sm.set_path(tree, path, leaf * keep)
+        new = dict(new, **{which: tree})
+    return new

@@ -1,0 +1,121 @@
+"""Roofline term extraction from the compiled dry-run artifact
+(ROOFLINE ANALYSIS section of the task).
+
+  compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory_s     = HLO_bytes_per_device / HBM_BW
+  collective_s = collective_bytes_per_device / LINK_BW
+
+cost_analysis() provides flops/bytes (per-device SPMD module);
+collective bytes are parsed from the compiled HLO text — we sum the
+RESULT-shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (a per-device proxy of link traffic).
+Hardware constants: TPU v5e-like (197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+import re
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e5m2": 1, "f8e4m3fn": 1,
+}
+
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+
+# e.g.  %all-gather.5 = bf16[16,4096,512]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective kind. '-done' ops are skipped
+    (the '-start' carries the shape; avoids double counting)."""
+    out = {k: 0 for k in _COLL}
+    count = {k: 0 for k in _COLL}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.groups()
+        out[kind] += _shape_bytes(dtype, dims)
+        count[kind] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": sum(out.values())}
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: float, chips: int,
+                   model_flops: float | None = None) -> dict:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    out = dict(terms, dominant=dom, chips=chips,
+               step_time_lower_bound_s=bound)
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["hlo_flops_global"] = flops * chips
+        out["useful_flops_ratio"] = model_flops / max(flops * chips, 1.0)
+        out["mfu_upper_bound"] = (model_flops / chips / PEAK_FLOPS
+                                  / max(bound, 1e-12))
+    return out
+
+
+def analyze_compiled(compiled, chips: int, model_flops=None) -> dict:
+    """Loop-weighted HLO cost (hlo_cost.py) is the primary source —
+    XLA's cost_analysis() counts while-loop bodies once and under-counts
+    scanned models by the trip count (EXPERIMENTS.md §Perf notes). The
+    raw XLA numbers are kept for reference."""
+    from repro.roofline import hlo_cost
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    text = compiled.as_text()
+    weighted = hlo_cost.analyze_text(text)
+    flops = float(weighted["flops"])
+    bts = float(weighted["bytes_accessed"])
+    coll = {"bytes": weighted["collectives"]["bytes"],
+            "count": weighted["collectives"]["count"],
+            "total_bytes": float(weighted["collective_bytes"])}
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            mem[k] = getattr(ma, k, None)
+    except Exception:
+        pass
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": bts,
+        "collectives": coll,
+        "xla_raw": {"flops": float(cost.get("flops", 0.0)),
+                    "bytes_accessed": float(cost.get("bytes accessed",
+                                                     0.0))},
+        "loop_weights": weighted["weights_nontrivial"],
+        "memory": mem,
+        "roofline": roofline_terms(flops, bts, coll["total_bytes"],
+                                   chips, model_flops),
+    }

@@ -1,0 +1,48 @@
+"""Baseline vs optimized roofline comparison table.
+
+    PYTHONPATH=src python -m repro.roofline.compare \
+        results/dryrun results/dryrun_opt
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(d):
+    out = {}
+    for n in sorted(os.listdir(d)):
+        if n.endswith(".json"):
+            r = json.load(open(os.path.join(d, n)))
+            out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def main():
+    base = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    opt = load(sys.argv[2] if len(sys.argv) > 2 else
+               "results/dryrun_opt")
+    print("| arch | shape | term | baseline_s | optimized_s | delta |")
+    print("|---|---|---|---|---|---|")
+    total_b = total_o = 0.0
+    for key in sorted(base):
+        if key[2] != "16x16" or key not in opt:
+            continue
+        rb, ro = base[key]["roofline"], opt[key]["roofline"]
+        bb = rb["step_time_lower_bound_s"]
+        oo = ro["step_time_lower_bound_s"]
+        total_b += bb
+        total_o += oo
+        if abs(bb - oo) / max(bb, 1e-12) < 0.01:
+            continue
+        print(f"| {key[0]} | {key[1]} | {rb['dominant'].replace('_s','')}"
+              f" | {bb:.4f} | {oo:.4f} | "
+              f"{(oo - bb) / bb * 100:+.1f}% |")
+    print(f"\nSum of dominant-term lower bounds over all cells: "
+          f"baseline {total_b:.2f}s -> optimized {total_o:.2f}s "
+          f"({(total_o - total_b) / total_b * 100:+.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

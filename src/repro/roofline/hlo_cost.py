@@ -1,0 +1,402 @@
+"""Loop-weighted HLO cost model (the §Roofline measurement backbone).
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE — for a
+scan-over-layers model that under-counts FLOPs/bytes/collective-bytes by
+the trip count (94x for qwen3!; verified empirically, see EXPERIMENTS.md
+§Perf notes). This module re-derives the three roofline inputs from the
+optimized HLO text with per-computation execution weights:
+
+  * computations are segmented from the text; ``while`` ops link their
+    body/condition; the trip count is read from the loop condition's
+    comparison constant;
+  * weight(ENTRY)=1; weight(while body) += weight(caller) x trips;
+    ``conditional`` branches inherit the caller weight (both branches
+    counted — the prune-refresh branch is cheap sorts, noted);
+  * FLOPs: dot ops contribute 2 x |result| x |contracting dims|
+    (elementwise flops are ignored — matmuls dominate; convolutions are
+    not used by these models);
+  * bytes: every op in a weighted computation contributes result +
+    operand bytes, EXCEPT no-traffic ops (parameter/constant/tuple/gte/
+    bitcast) and fusion-internal ops (a fusion's interior values never
+    touch HBM — only the fusion call site's operands/result count, which
+    is MORE faithful to real traffic than XLA's own metric);
+  * collectives: result bytes of all-gather/all-reduce/reduce-scatter/
+    all-to-all/collective-permute, loop-weighted.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e5m2": 1,
+    "f8e4m3fn": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*=\s*(.+)$")
+_OPCODE_RE = re.compile(r"^\(?\s*(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+                        r"(?:\{[0-9,]*\})?)\s*\)?\s*([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*(?:\(.*)?\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=(%?[\w\.\-]+).*?body=(%?[\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=(%?[\w\.\-]+)")
+_COND_BRANCHES_RE = re.compile(
+    r"conditional\(.*?\).*?branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_FUSION_RE = re.compile(r"fusion\(")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COLL = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+         "collective-permute")
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota"}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum of all array shapes in a type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _result_type(rhs: str) -> str:
+    """Type portion of an op definition rhs (before the opcode)."""
+    m = re.match(r"^\(?((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]"
+                 r"(?:\{[0-9,]*\})?)(?:,\s*[a-z0-9]+\[[0-9,]*\]"
+                 r"(?:\{[0-9,]*\})?)*)\)?\s*[\w\-]+\(", rhs)
+    return m.group(1) if m else rhs.split(" ")[0]
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    rhs: str
+    result_bytes: int
+    result_dims: list[int]
+    dtype_bytes: int
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list[Op] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # op name -> bytes
+    is_fusion_interior: bool = False
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for line in text.splitlines():
+        if cur is None:
+            stripped = line.rstrip()
+            if not stripped.endswith("{"):
+                continue
+            if " -> " not in stripped and not stripped.startswith("ENTRY"):
+                continue   # metadata blocks (FileLocations etc.)
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                name = m.group(1).lstrip("%")
+                cur = Computation(name=name)
+                if line.startswith("ENTRY"):
+                    entry_name = name
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1).lstrip("%"), m.group(2)
+        om = _OPCODE_RE.match(rhs)
+        opcode = om.group(1) if om else rhs.split("(")[0].split()[-1]
+        rtype = _result_type(rhs)
+        rb = _shape_bytes(rtype)
+        sm_ = _SHAPE_RE.search(rtype)
+        dims = [int(d) for d in sm_.group(2).split(",") if d] if sm_ else []
+        dtb = _DTYPE_BYTES.get(sm_.group(1), 4) if sm_ else 4
+        cur.ops.append(Op(name, opcode, rhs, rb, dims, dtb))
+        cur.shapes[name] = rb
+    if cur is not None:
+        comps[cur.name] = cur
+    comps["__entry__"] = comps.get(entry_name, Computation("none"))
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the loop condition (the bound)."""
+    best = 1
+    for op in cond.ops:
+        for c in _CONST_RE.findall(op.rhs):
+            best = max(best, int(c))
+    return best
+
+
+def computation_weights(comps: dict[str, Computation]) -> dict[str, float]:
+    entry = comps["__entry__"].name
+    weights = {name: 0.0 for name in comps}
+    weights[entry] = 1.0
+    # iterate to fixpoint (nesting depth is small)
+    for _ in range(12):
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for cname, comp in comps.items():
+            if cname == "__entry__":
+                continue
+            w = weights.get(cname, 0.0)
+            if w == 0.0:
+                continue
+            for op in comp.ops:
+                wm = _WHILE_RE.search(op.rhs)
+                if wm:
+                    cond = wm.group(1).lstrip("%")
+                    body = wm.group(2).lstrip("%")
+                    trips = _trip_count(comps[cond]) if cond in comps \
+                        else 1
+                    new[body] = new.get(body, 0.0) + w * trips
+                    new[cond] = new.get(cond, 0.0) + w * (trips + 1)
+                    continue
+                bm = _COND_BRANCHES_RE.search(op.rhs)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        b = b.strip().lstrip("%")
+                        if b in comps:
+                            new[b] = new.get(b, 0.0) + w
+                    continue
+                if op.opcode in ("call", "fusion"):
+                    # fusion targets inherit weight so interior DOTs are
+                    # flop-counted; byte accounting still treats their
+                    # interiors as HBM-free (is_fusion_interior).
+                    cm = _CALL_RE.search(op.rhs)
+                    if cm:
+                        t = cm.group(1).lstrip("%")
+                        if t in comps:
+                            new[t] = new.get(t, 0.0) + w
+        if all(abs(new[k] - weights.get(k, 0.0)) < 1e-9 for k in new):
+            weights = new
+            break
+        weights = new
+    return weights
+
+
+def _mark_fusion_interiors(comps: dict[str, Computation]):
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                cm = _CALL_RE.search(op.rhs)
+                if cm:
+                    t = cm.group(1).lstrip("%")
+                    if t in comps:
+                        comps[t].is_fusion_interior = True
+
+
+_OPERAND_RE = re.compile(r"\(([^)]*)\)")
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+_TRANSPARENT = ("convert", "bitcast", "reshape", "copy", "transpose")
+
+
+def _fusion_effective_bytes(fusion_op: Op, target: Computation) -> int:
+    """Physical HBM traffic of one fusion execution.
+
+    Interior values never hit HBM; inputs consumed ONLY through
+    slice/gather ops charge the slice result (a scan body fused with its
+    per-trip dynamic-slice reads one step's slice, not the whole stacked
+    array); outputs written through a root dynamic-update-slice charge
+    the update region (in-place carry update), not the full buffer.
+
+    Convert/bitcast/reshape chains are TRANSPARENT: the XLA CPU
+    backend's float-normalization pass wraps bf16 loop carries in
+    full-tensor f32 round-trips that a TPU build never materialises
+    (found on the qwen2 decode cell — EXPERIMENTS.md §Perf P3)."""
+    ops_by_name = {op.name: op for op in target.ops}
+    consumers: dict[str, list[Op]] = {}
+    params: dict[str, Op] = {}
+    for op in target.ops:
+        if op.opcode == "parameter":
+            params[op.name] = op
+        for o in _operand_names(op.rhs):
+            consumers.setdefault(o, []).append(op)
+
+    def resolve_consumers(name: str, depth=0) -> list:
+        """Effective (orig_name, consumer) pairs, skipping through
+        transparent ops."""
+        out = []
+        if depth > 8:
+            return out
+        for c in consumers.get(name, []):
+            if c.opcode in _TRANSPARENT:
+                nxt = resolve_consumers(c.name, depth + 1)
+                out.extend((name, cc) for _, cc in nxt) if nxt else \
+                    out.append((name, c))
+            else:
+                out.append((name, c))
+        return out
+
+    def _resolve_back(name: str) -> str:
+        """Follow transparent defs backwards to the producer name."""
+        seen = set()
+        while name in ops_by_name and \
+                ops_by_name[name].opcode in _TRANSPARENT and \
+                name not in seen:
+            seen.add(name)
+            srcs = _operand_names(ops_by_name[name].rhs)
+            if not srcs:
+                break
+            name = srcs[0]
+        return name
+
+    def _windowed_read(p: str, c: Op):
+        if c.opcode in ("dynamic-slice", "slice", "gather"):
+            return c.result_bytes
+        if c.opcode == "dynamic-update-slice":
+            ops_ = _operand_names(c.rhs)
+            if ops_ and _resolve_back(ops_[0]) == p:
+                return 0          # in-place destination: no read
+            return None           # update operand: full (small) read
+        return None
+
+    eff_in = 0
+    for pname, pop in params.items():
+        cons = resolve_consumers(pname)
+        if not cons:
+            continue
+        reads = [_windowed_read(orig, c) for orig, c in cons]
+        if all(r is not None for r in reads):
+            eff_in += sum(reads)
+        else:
+            eff_in += pop.result_bytes
+
+    def _out_bytes_for(name: str) -> int:
+        defop = ops_by_name.get(_resolve_back(name))
+        if defop is None:
+            return target.shapes.get(name, 0)
+        if defop.opcode == "dynamic-update-slice":
+            oo = _operand_names(defop.rhs)
+            return 2 * (target.shapes.get(oo[1], 0) if len(oo) > 1
+                        else 0)
+        if defop.opcode == "parameter":
+            return 0              # pass-through output: no new write
+        return defop.result_bytes
+
+    root = target.ops[-1] if target.ops else None
+    if root is None:
+        eff_out = fusion_op.result_bytes
+    elif root.opcode == "tuple":
+        eff_out = sum(_out_bytes_for(o)
+                      for o in _operand_names(root.rhs))
+    else:
+        eff_out = _out_bytes_for(root.name)
+    return eff_in + eff_out
+
+
+def _operand_names(rhs: str) -> list[str]:
+    m = _OPERAND_RE.search(rhs[rhs.index("("):] if "(" in rhs else rhs)
+    if not m:
+        return []
+    out = []
+    for tok in m.group(1).split(","):
+        tok = tok.strip()
+        if tok.startswith("%"):
+            out.append(tok.lstrip("%"))
+        elif re.fullmatch(r"[\w\.\-]+", tok):
+            out.append(tok)
+    return out
+
+
+def _dot_flops(op: Op, shapes_dims: dict[str, list[int]]) -> int:
+    """2 x |result| x prod(contracting dim sizes)."""
+    cm = _CONTRACT_RE.search(op.rhs)
+    if not cm:
+        return 0
+    lhs = _operand_names(op.rhs)
+    lhs_dims = shapes_dims.get(lhs[0], []) if lhs else []
+    contract = 1
+    for d in cm.group(1).split(","):
+        if d and int(d) < len(lhs_dims):
+            contract *= lhs_dims[int(d)]
+    out = math.prod(op.result_dims) if op.result_dims else 1
+    return 2 * out * contract
+
+
+def analyze_text(text: str) -> dict:
+    comps = parse_hlo(text)
+    _mark_fusion_interiors(comps)
+    weights = computation_weights(comps)
+    # symbol dims table per computation for dot lhs lookup
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll_bytes = {k: 0.0 for k in _COLL}
+    coll_count = {k: 0 for k in _COLL}
+    for cname, comp in comps.items():
+        if cname == "__entry__":
+            continue
+        w = weights.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        dims_tbl = {op.name: op.result_dims for op in comp.ops}
+        in_fusion = comp.is_fusion_interior
+        for op in comp.ops:
+            if op.opcode in ("dot", "dot-general"):
+                flops += w * _dot_flops(op, dims_tbl)
+            if in_fusion:
+                continue   # interior values never touch HBM
+            kind = next((k for k in _COLL if op.opcode.startswith(k)), None)
+            if kind and not op.opcode.endswith("-done"):
+                coll_bytes[kind] += w * op.result_bytes
+                coll_count[kind] += int(w)
+            if op.opcode in _NO_TRAFFIC or op.opcode in ("while",
+                                                         "conditional"):
+                continue
+            if op.opcode == "fusion":
+                cm = _CALL_RE.search(op.rhs)
+                tgt = comps.get(cm.group(1).lstrip("%")) if cm else None
+                if tgt is not None:
+                    bytes_accessed += w * _fusion_effective_bytes(op, tgt)
+                    continue
+            # Sliced access patterns must NOT charge the full operand:
+            # a scan trip dynamic-slices its per-step inputs out of the
+            # stacked array — physical traffic is the slice, not the
+            # stack (found when zamba2 showed a 295 s memory term).
+            if op.opcode in ("dynamic-slice", "slice"):
+                bytes_accessed += w * 2 * op.result_bytes
+                continue
+            if op.opcode == "dynamic-update-slice":
+                ops_ = _operand_names(op.rhs)
+                upd = comp.shapes.get(ops_[1], 0) if len(ops_) > 1 else 0
+                bytes_accessed += w * 2 * upd
+                continue
+            if op.opcode == "gather":
+                bytes_accessed += w * 2 * op.result_bytes
+                continue
+            if op.opcode in ("scatter", "select-and-scatter"):
+                ops_ = _operand_names(op.rhs)
+                upd = comp.shapes.get(ops_[-1], 0) if ops_ else 0
+                bytes_accessed += w * (2 * upd + op.result_bytes)
+                continue
+            operands = sum(comp.shapes.get(o, 0)
+                           for o in _operand_names(op.rhs))
+            bytes_accessed += w * (op.result_bytes + operands)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collective_bytes": sum(coll_bytes.values()),
+        "collectives": {"bytes": coll_bytes, "count": coll_count},
+        "weights_nontrivial": {k: v for k, v in weights.items()
+                               if v > 1.5},
+    }

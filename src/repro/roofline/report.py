@@ -1,0 +1,98 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the per-cell
+dry-run JSONs.
+
+    PYTHONPATH=src python -m repro.roofline.report results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load(out_dir: str) -> list[dict]:
+    rows = []
+    for name in sorted(os.listdir(out_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(out_dir, name)) as f:
+                rows.append(json.load(f))
+    return rows
+
+
+def fmt_bytes(b) -> str:
+    b = float(b or 0)
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if b < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PiB"
+
+
+def dryrun_table(rows: list[dict]) -> str:
+    out = ["| arch | shape | mesh | kind | compile_s | args/dev | "
+           "temp/dev | HLO GFLOP/dev | coll MB/dev | #coll |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        mem = r.get("memory", {})
+        coll = r["collectives"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} | "
+            f"{r['compile_s']} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes'))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes'))} | "
+            f"{r['flops_per_device'] / 1e9:.1f} | "
+            f"{coll['total_bytes'] / 1e6:.1f} | "
+            f"{sum(coll['count'].values())} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: list[dict], mesh: str = "16x16") -> str:
+    out = ["| arch | shape | compute_s | memory_s | collective_s | "
+           "dominant | MODEL_TF | useful_ratio | MFU_bound |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        rl = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.4f} | "
+            f"{rl['memory_s']:.4f} | {rl['collective_s']:.4f} | "
+            f"**{rl['dominant'].replace('_s','')}** | "
+            f"{rl.get('model_flops', 0) / 1e12:.1f} | "
+            f"{rl.get('useful_flops_ratio', 0):.3f} | "
+            f"{rl.get('mfu_upper_bound', 0):.3f} |")
+    return "\n".join(out)
+
+
+def pick_hillclimb(rows: list[dict]) -> list[tuple[str, str, str]]:
+    """worst MFU bound / most collective-bound / most paper-representative."""
+    single = [r for r in rows if r["mesh"] == "16x16"
+              and r["kind"] == "train"]
+    worst = min(single, key=lambda r: r["roofline"].get(
+        "mfu_upper_bound", 1))
+    collb = max(rows, key=lambda r: (
+        r["roofline"]["collective_s"]
+        / max(r["roofline"]["step_time_lower_bound_s"], 1e-12)
+        if r["mesh"] == "16x16" else 0))
+    return [(worst["arch"], worst["shape"], "worst MFU bound"),
+            (collb["arch"], collb["shape"], "most collective-bound"),
+            ("qwen2-7b", "decode_32k",
+             "paper-representative: sparse-MLP-dominated decode")]
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    rows = load(out_dir)
+    print(f"## Dry-run ({len(rows)} cells)\n")
+    print(dryrun_table(rows))
+    print("\n## Roofline (single-pod 16x16, per-device terms)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(rows, "2x16x16"))
+    print("\n## Hillclimb picks\n")
+    for arch, shape, why in pick_hillclimb(rows):
+        print(f"* {arch} x {shape} — {why}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Export a trained BLaST model for serving (paper §5.2 / Fig. 7):
+
+  * ``prune_params``  — bake masks into weights (zeros in pruned blocks),
+    cast to bf16: the baseline serving layout;
+  * ``pack_params``   — replace every sparse weight with its balanced-
+    BCSC ``PackedBCSC`` (blocks + int32 index table): the 1/(1-s) memory
+    reduction and the input the BSpMM kernels consume.
+
+``memory_report`` quantifies the Fig. 7 claim (bytes & #accelerators).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing, sparse_mlp as sm, topk
+from repro.models import registry
+
+
+def prune_params(cfg, params, masks, dtype=jnp.bfloat16):
+    out = params
+    for path, m in masks.items():
+        w = sm.get_path(params, path)
+        bi, bo = sm.block_dims_for(cfg.blast, path)
+        out = sm.set_path(out, path,
+                          topk.apply_block_mask(w, m, bi, bo))
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, out)
+
+
+def pack_params(cfg, params, masks, dtype=jnp.bfloat16):
+    """Sparse leaves -> PackedBCSC (static nnz = max kept per column,
+    uniform under balanced selection)."""
+    pruned = prune_params(cfg, params, masks, dtype)
+    out = pruned
+    for path, m in masks.items():
+        w = sm.get_path(pruned, path)
+        bi, bo = sm.block_dims_for(cfg.blast, path)
+        counts = np.asarray(jax.device_get(m)).sum(axis=-2)
+        nnz = int(counts.max())
+        p = packing.pack_stacked(w, m, bi, bo, nnz)
+        out = sm.set_path(out, path, p)
+    return out
+
+
+def abstract_packed_params(cfg, sparsity: float, mesh=None):
+    """ShapeDtypeStruct serving params with sparse leaves replaced by
+    abstract PackedBCSC at ``sparsity`` (dry-run: the compiled serve
+    step carries the true sparse FLOPs and packed memory footprint).
+
+    Returns (abstract_params, shardings | None)."""
+    import math
+
+    from repro.core.packing import PackedBCSC
+    from repro.distributed import sharding as shd
+
+    abs_p = registry.abstract_params(cfg)
+    abs_p = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, jnp.bfloat16 if s.dtype == jnp.float32 else s.dtype),
+        abs_p)
+    shards = shd.param_sharding_tree(registry.param_specs(cfg), mesh) \
+        if mesh is not None else None
+    axes = registry.axes_tree(cfg)
+    tp = 1
+    if mesh is not None:
+        tp = dict(zip(mesh.axis_names,
+                      mesh.devices.shape)).get("model", 1)
+    for path in registry.sparse_paths(cfg):
+        w = sm.get_path(abs_p, path)
+        bi, bo = sm.block_dims_for(cfg.blast, path)
+        kb, nb = w.shape[-2] // bi, w.shape[-1] // bo
+        nnz = max(1, math.ceil((1.0 - sparsity) * kb))
+        swapped = path.split("/")[-1] in sm._SWAPPED_LEAVES
+        if swapped and nnz >= tp:
+            # down-projections: column-blocks = d_model (often not
+            # tp-divisible) — shard the nnz CONTRACTION dim instead
+            # (zero-block padded; partial sums psum exactly)
+            nnz = math.ceil(nnz / tp) * tp
+        lead = w.shape[:-2]
+        packed = PackedBCSC(
+            blocks=jax.ShapeDtypeStruct(lead + (nb, nnz, bi, bo),
+                                        jnp.bfloat16),
+            idx=jax.ShapeDtypeStruct(lead + (nb, nnz), jnp.int32),
+            kb=kb)
+        abs_p = sm.set_path(abs_p, path, packed)
+        if shards is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            waxes = sm.get_path(axes, path)
+            nlead = len(lead)
+            lead_parts = [shd.spec_for((w.shape[i],), (waxes[i],),
+                                       mesh)[0] for i in range(nlead)]
+            if swapped and nnz % tp == 0:
+                bspec = P(*lead_parts, None, "model", None, None)
+                ispec = P(*lead_parts, None, "model")
+            elif not swapped and nb % tp == 0:
+                bspec = P(*lead_parts, "model", None, None, None)
+                ispec = P(*lead_parts, "model", None)
+            else:
+                bspec = P(*lead_parts, None, None, None, None)
+                ispec = P(*lead_parts, None, None)
+            shards = sm.set_path(
+                shards, path,
+                PackedBCSC(blocks=NamedSharding(mesh, bspec),
+                           idx=NamedSharding(mesh, ispec), kb=kb))
+    return abs_p, shards
+
+
+def memory_report(cfg, params_or_packed) -> dict:
+    """Bytes of the serving weights + #accelerators at a given HBM size
+    (paper Fig. 7 uses 96 GB GH200; TPU v5e is 16 GB)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+            params_or_packed,
+            is_leaf=lambda x: isinstance(x, packing.PackedBCSC)):
+        if isinstance(leaf, packing.PackedBCSC):
+            total += packing.storage_bytes(leaf)
+        else:
+            total += leaf.size * leaf.dtype.itemsize
+    return {
+        "bytes": int(total),
+        "GiB": total / 2**30,
+        "chips_v5e_16GB": int(np.ceil(total / (16 * 2**30))),
+        "gpus_96GB": int(np.ceil(total / (96 * 2**30))),
+    }

@@ -1,0 +1,66 @@
+"""Batched serving loop: prefill a batch of prompts token-by-token into
+the caches (exact w.r.t. decode numerics), then decode with the jitted
+single-token step. Weights are PRUNED (and optionally PACKED) — the
+paper's inference setting (§5.2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+from repro.serving.step import make_decode_step
+
+
+def prefill_with_decode(cfg, params, prompts, max_len: int, dist=None,
+                        frames=None):
+    """Seed caches by running the decode step over the prompt tokens
+    (bitwise-consistent with decode; fine for CPU-scale serving).
+    For whisper, ``frames`` seeds the cross-attention cache."""
+    b, plen = prompts.shape
+    kw = {"enc_len": max_len} if cfg.family == "audio" else {}
+    cache = registry.init_cache(cfg, b, max_len, **kw)
+    if cfg.family == "audio":
+        from repro.models import whisper as whisper_mod
+        assert frames is not None, "whisper serving needs frames"
+        ck, cv = whisper_mod.prefill_cross(cfg, params, frames, dist=dist)
+        cache = dict(cache, ck=ck.astype(cache["ck"].dtype),
+                     cv=cv.astype(cache["cv"].dtype))
+    step = jax.jit(lambda p, c, t, i: registry.decode_step(
+        cfg, p, c, t, i, masks=None, dist=dist))
+    logits = None
+    for i in range(plen):
+        logits, cache = step(params, cache, prompts[:, i:i + 1],
+                             jnp.int32(i))
+    return logits[:, -1], cache
+
+
+def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
+             max_len: int | None = None, temperature: float = 0.0,
+             dist=None, rng=None, frames=None):
+    """Greedy/temperature generation for a batch of equal-length prompts.
+
+    Returns (tokens (B, plen+new), stats dict)."""
+    b, plen = prompts.shape
+    max_len = max_len or (plen + max_new_tokens)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    last_logits, cache = prefill_with_decode(cfg, params, prompts,
+                                             max_len, dist, frames=frames)
+    decode = jax.jit(make_decode_step(cfg, dist=dist,
+                                      temperature=temperature))
+    nxt = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
+    out = [prompts, nxt]
+    t0 = time.time()
+    for i in range(max_new_tokens - 1):
+        pos = jnp.int32(plen + i)
+        nxt, cache, _, rng = decode(params, cache, nxt, pos, rng)
+        out.append(nxt)
+    jax.block_until_ready(nxt)
+    dt = time.time() - t0
+    toks = jnp.concatenate(out, axis=1)
+    stats = {"decode_s": dt,
+             "tok_per_s": b * (max_new_tokens - 1) / max(dt, 1e-9)}
+    return np.asarray(toks), stats

@@ -1,0 +1,41 @@
+"""Serving steps: prefill (build cache + last-token logits) and decode
+(one token with cache). Weights arrive already PRUNED (zeros in pruned
+blocks) or PACKED (balanced BCSC — the paper's inference memory win;
+``export.py``). Greedy sampling by default; temperature optional at the
+loop level.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry
+
+
+def make_prefill_step(cfg, dist=None):
+    """prefill(params, tokens, **frontend) -> (last_logits, kv-seed).
+
+    For the KV-cache families the prefill writes the cache via the
+    training forward's returned K/V; here (dry-run + CPU serving) we
+    lower the forward and re-run decode from scratch caches, which is
+    the same compute cost — the cache-write variant is a serving-loop
+    detail (serve_loop.py seeds caches token-by-token for exactness)."""
+    def prefill_step(params, tokens, **kw):
+        logits, _ = registry.forward(cfg, params, tokens, masks=None,
+                                     dist=dist, **kw)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(cfg, dist=None, temperature: float = 0.0):
+    def decode_step(params, cache, tokens, pos, rng):
+        logits, cache = registry.decode_step(cfg, params, cache, tokens,
+                                             pos, masks=None, dist=dist)
+        last = logits[:, -1]
+        if temperature > 0.0:
+            rng, sub = jax.random.split(rng)
+            nxt = jax.random.categorical(sub, last / temperature)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache, last, rng
+    return decode_step

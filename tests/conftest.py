@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see ONE
+device (task spec); multi-device tests spawn subprocesses."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.prune_grow import BlastSpec
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_cfg(**overrides) -> ModelConfig:
+    base = dict(
+        name="tiny", family="dense", num_layers=2, d_model=32,
+        num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+        vocab_size=64, mlp_kind="glu", mlp_act="silu",
+        norm_kind="rmsnorm", remat=False, compute_dtype="float32",
+        chunk_size=8,
+        blast=BlastSpec(enabled=True, b_in=16, b_out=16, s_max=0.75,
+                        total_steps=20, step_size=5, dense_last=1),
+    )
+    base.update(overrides)
+    return ModelConfig(**base)

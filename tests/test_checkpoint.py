@@ -1,0 +1,51 @@
+"""Checkpointer: roundtrip, atomicity, keep-k, latest discovery."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import tiny_cfg
+from repro.checkpointing.checkpoint import Checkpointer
+from repro.training import step as ts
+
+
+def test_roundtrip(tmp_path):
+    cfg = tiny_cfg()
+    state = ts.init_state(cfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(1, state, blocking=True)
+    restored = ck.restore_state(state)
+    for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                    jax.tree_util.tree_leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree_util.tree_leaves(state.masks),
+                    jax.tree_util.tree_leaves(restored.masks)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_k_and_latest(tmp_path):
+    cfg = tiny_cfg()
+    state = ts.init_state(cfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, state, blocking=True)
+    assert ck.steps() == [3, 4]
+    assert ck.latest_step() == 4
+
+
+def test_no_tmp_left_behind(tmp_path):
+    cfg = tiny_cfg()
+    state = ts.init_state(cfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(7, state, blocking=True)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_async_save(tmp_path):
+    cfg = tiny_cfg()
+    state = ts.init_state(cfg, jax.random.PRNGKey(0))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, state, blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 5

@@ -1,0 +1,68 @@
+"""Gradient compression (int8-EF) + microbatch grad-accumulation tests
+(beyond-paper distributed optimizations, DESIGN.md §4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import tiny_cfg
+from repro.optim import adamw, compress
+from repro.training import step as ts
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.01, 100.0))
+@settings(max_examples=25, deadline=None)
+def test_quantize_bounded_error(seed, scale):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * scale
+    err0 = jnp.zeros_like(g)
+    q, s, err = compress.quantize_int8(g, err0)
+    deq = compress.dequantize(q, s)
+    bound = float(jnp.abs(g).max()) / 127.0
+    assert float(jnp.abs(deq - g).max()) <= bound * 0.5 + 1e-9
+    # residual is exactly the quantization error
+    np.testing.assert_allclose(np.asarray(err), np.asarray(g - deq),
+                               atol=1e-6)
+
+
+def test_error_feedback_unbiased():
+    g = jax.random.normal(jax.random.PRNGKey(0), (32,)) * 0.1
+    err = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    for _ in range(100):
+        q, s, err = compress.quantize_int8(g, err)
+        acc = acc + compress.dequantize(q, s)
+    np.testing.assert_allclose(np.asarray(acc / 100), np.asarray(g),
+                               atol=2e-4)
+
+
+def test_traffic_report_sparse():
+    grads = {"layers": {"mlp": {"w_gate": jnp.ones((64, 64))}},
+             "embed": jnp.ones((64, 64))}
+    masks = {"layers/mlp/w_gate": jnp.zeros((4, 4), bool)
+             .at[0].set(True)}                      # 25% kept
+    r = compress.traffic_report(grads, masks)
+    assert r["int8_bytes"] == 2 * 64 * 64
+    assert r["int8_sparse_bytes"] == 64 * 64 + 64 * 64 // 4
+    assert r["reduction_vs_f32"] > 4.0
+
+
+def test_microbatch_equivalent():
+    cfg = tiny_cfg()
+    opt = adamw.AdamWConfig(total_steps=10, warmup_steps=0)
+    state = ts.init_state(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 32), 0,
+                                     cfg.vocab_size),
+    }
+    s1, m1 = jax.jit(ts.make_train_step(cfg, opt))(state, batch)
+    s4, m4 = jax.jit(ts.make_train_step(cfg, opt, microbatches=4))(
+        state, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]),
+                                              rel=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s4.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5)

@@ -1,0 +1,65 @@
+"""Decode-with-cache must reproduce the full forward's logits
+(the KV cache / recurrent-state paths are exact, not approximate)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import registry
+
+ARCHS = ["internvl2-2b", "gemma2-27b", "rwkv6-3b", "zamba2-1.2b",
+         "qwen3-moe-235b-a22b"]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    # patches complicate position bookkeeping; drop them for this test
+    if cfg.family == "vlm":
+        cfg = dataclasses.replace(cfg, num_patches=0)
+    if cfg.is_moe:
+        # GShard capacity drops differ between prefill-sized and
+        # decode-sized batches; disable drops for the exactness check
+        cfg = dataclasses.replace(cfg,
+                                  capacity_factor=float(cfg.num_experts))
+    params = registry.init_params(cfg, rng)
+    B, S = 2, 16
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    full_logits, _ = registry.forward(cfg, params, tokens)
+
+    cache = registry.init_cache(cfg, B, S, dtype=jnp.float32)
+    got = []
+    for t in range(S):
+        logits, cache = registry.decode_step(cfg, params, cache,
+                                             tokens[:, t:t + 1],
+                                             jnp.int32(t))
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_whisper_decode_matches_forward(rng):
+    from repro.models import whisper as wmod
+    cfg = get_config("whisper-large-v3", smoke=True)
+    params = registry.init_params(cfg, rng)
+    B, S = 2, 16
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    frames = jax.random.normal(rng, (B, S, cfg.d_model)) * 0.02
+    full_logits, _ = registry.forward(cfg, params, tokens, frames=frames)
+
+    cache = registry.init_cache(cfg, B, S, dtype=jnp.float32, enc_len=S)
+    ck, cv = wmod.prefill_cross(cfg, params, frames, dtype=jnp.float32)
+    cache = dict(cache, ck=ck, cv=cv)
+    got = []
+    for t in range(S):
+        logits, cache = registry.decode_step(cfg, params, cache,
+                                             tokens[:, t:t + 1],
+                                             jnp.int32(t))
+        got.append(logits[:, 0])
+    got = jnp.stack(got, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full_logits),
+                               atol=2e-2, rtol=2e-2)

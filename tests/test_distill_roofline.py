@@ -1,0 +1,72 @@
+"""Distillation loss + roofline parser unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distill import cross_entropy, distill_loss, kl_to_teacher
+from repro.roofline import analysis
+
+
+def test_ce_matches_manual(rng):
+    logits = jax.random.normal(rng, (2, 5, 11))
+    labels = jax.random.randint(rng, (2, 5), 0, 11)
+    got = float(cross_entropy(logits, labels))
+    p = jax.nn.log_softmax(logits, -1)
+    want = float(-jnp.take_along_axis(
+        p, labels[..., None], axis=-1).mean())
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_ce_ignore_index(rng):
+    logits = jax.random.normal(rng, (1, 4, 7))
+    labels = jnp.asarray([[1, 2, -100, -100]])
+    got = float(cross_entropy(logits, labels))
+    want = float(cross_entropy(logits[:, :2], labels[:, :2]))
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+def test_kl_zero_for_identical(rng):
+    logits = jax.random.normal(rng, (2, 3, 13))
+    assert float(kl_to_teacher(logits, logits)) == pytest.approx(0.0,
+                                                                 abs=1e-6)
+
+
+def test_distill_combines(rng):
+    s = jax.random.normal(rng, (1, 4, 9))
+    t = jax.random.normal(jax.random.PRNGKey(9), (1, 4, 9))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    base = float(distill_loss(s, labels))
+    with_kd = float(distill_loss(s, labels, t, alpha=1.0, beta=2.0))
+    assert with_kd > base
+
+
+HLO = """
+  %ag = bf16[16,4096,512]{2,1,0} all-gather(x), replica_groups={}
+  %ar.1 = f32[1024]{0} all-reduce(y), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(z), dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(w), dimensions={0}
+  %cp = u32[4]{0} collective-permute(v), source_target_pairs={{0,1}}
+  %ignored = f32[2] add(a, b)
+  %agd = bf16[99]{0} all-gather-done(q)
+"""
+
+
+def test_collective_bytes_parser():
+    out = analysis.collective_bytes(HLO)
+    b = out["bytes"]
+    assert b["all-gather"] == 16 * 4096 * 512 * 2
+    assert b["all-reduce"] == 1024 * 4
+    assert b["reduce-scatter"] == 64 * 32 * 4
+    assert b["all-to-all"] == 8 * 128 * 2
+    assert b["collective-permute"] == 4 * 4
+    assert out["count"]["all-gather"] == 1   # -done line skipped
+
+
+def test_roofline_terms():
+    r = analysis.roofline_terms(197e12, 819e9, 50e9, chips=256,
+                                model_flops=197e12 * 256)
+    assert r["compute_s"] == pytest.approx(1.0)
+    assert r["memory_s"] == pytest.approx(1.0)
+    assert r["collective_s"] == pytest.approx(1.0)
+    assert r["useful_flops_ratio"] == pytest.approx(1.0)

@@ -1,0 +1,86 @@
+"""Pallas BSpMM + fused Sparse-MLP kernels vs the pure-jnp oracle
+(ref.py), swept over shapes / dtypes / sparsities / block sizes in
+interpret mode (task spec: per-kernel allclose vs ref)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, topk
+from repro.core.prune_grow import BlastSpec, generate_mask
+from repro.kernels import bspmm as pk, ops, ref
+
+
+def _packed(key, K, N, bi, bo, s, dtype):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (K, N), jnp.float32)
+    g = jax.random.normal(k2, (K, N), jnp.float32)
+    spec = BlastSpec(b_in=bi, b_out=bo, s_max=s, total_steps=1)
+    m = generate_mask(spec, w, g, 1)
+    wm = topk.apply_block_mask(w, m, bi, bo).astype(dtype)
+    return packing.pack(wm, m, bi, bo)
+
+
+SHAPES = [
+    # (M, K, N, bi, bo, sparsity)
+    (16, 32, 32, 8, 8, 0.0),
+    (32, 64, 96, 16, 16, 0.5),
+    (64, 128, 64, 32, 16, 0.75),
+    (8, 256, 128, 64, 32, 0.9),
+    (128, 64, 64, 16, 64, 0.5),
+]
+
+
+@pytest.mark.parametrize("m,k,n,bi,bo,s", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bspmm_vs_ref(m, k, n, bi, bo, s, dtype):
+    key = jax.random.PRNGKey(hash((m, k, n, bi, bo)) % 2**31)
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    p = _packed(key, k, n, bi, bo, s, dtype)
+    want = ref.bspmm_ref(x, p).astype(jnp.float32)
+    got = pk.bspmm(x, p, blk_m=min(m, 16), interpret=True
+                   ).astype(jnp.float32)
+    tol = 2e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+    got_xla = ops.bspmm_xla(x, p).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_xla), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("act", ["silu", "gelu", "relu"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_glu_vs_ref(act, dtype):
+    key = jax.random.PRNGKey(7)
+    m, k, n, bi, bo = 32, 64, 64, 16, 16
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    pg = _packed(jax.random.PRNGKey(1), k, n, bi, bo, 0.5, dtype)
+    pu = _packed(jax.random.PRNGKey(2), k, n, bi, bo, 0.75, dtype)
+    want = ref.fused_glu_ref(x, pg, pu, act=act).astype(jnp.float32)
+    got = pk.fused_glu(x, pg, pu, act=act, blk_m=16, interpret=True
+                       ).astype(jnp.float32)
+    tol = 5e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+
+
+def test_sparse_mlp_full_eq1():
+    """Paper Eq. (1) end-to-end: (silu(XWg) * XWu) Wd, packed."""
+    key = jax.random.PRNGKey(0)
+    m, d, f = 32, 64, 128
+    x = jax.random.normal(key, (m, d))
+    pg = _packed(jax.random.PRNGKey(1), d, f, 16, 16, 0.6, jnp.float32)
+    pu = _packed(jax.random.PRNGKey(2), d, f, 16, 16, 0.6, jnp.float32)
+    pd = _packed(jax.random.PRNGKey(3), f, d, 16, 16, 0.6, jnp.float32)
+    want = ref.sparse_mlp_ref(x, pg, pu, pd)
+    got = ops.sparse_mlp_apply(x, pg, pu, pd, backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-4, rtol=1e-3)
+
+
+def test_flops_accounting():
+    p = _packed(jax.random.PRNGKey(0), 128, 128, 16, 16, 0.75,
+                jnp.float32)
+    sparse = ops.flops_bspmm(64, p)
+    dense = ops.flops_dense(64, 128, 128)
+    assert sparse / dense == pytest.approx(0.25, abs=0.05)

@@ -1,0 +1,97 @@
+"""Transposed BSpMM (backward) kernel + the trainable packed matmul."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing, topk
+from repro.core.prune_grow import BlastSpec, generate_mask
+from repro.kernels import bspmm_t, ops
+
+
+def _packed(key, K, N, bi, bo, s, selection="balanced"):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (K, N), jnp.float32)
+    g = jax.random.normal(k2, (K, N), jnp.float32)
+    spec = BlastSpec(b_in=bi, b_out=bo, s_max=s, total_steps=1,
+                     selection=selection)
+    m = generate_mask(spec, w, g, 1)
+    wm = topk.apply_block_mask(w, m, bi, bo)
+    return wm, packing.pack(wm, m, bi, bo)
+
+
+SHAPES = [
+    (16, 32, 32, 8, 8, 0.0),
+    (32, 64, 96, 16, 16, 0.5),
+    (64, 128, 64, 32, 16, 0.75),
+    (8, 256, 128, 64, 32, 0.9),
+]
+
+
+@pytest.mark.parametrize("m,k,n,bi,bo,s", SHAPES)
+def test_bspmm_t_vs_dense(m, k, n, bi, bo, s):
+    key = jax.random.PRNGKey(hash((m, k, n)) % 2**31)
+    dy = jax.random.normal(key, (m, n), jnp.float32)
+    wm, p = _packed(key, k, n, bi, bo, s)
+    want = dy @ wm.T
+    got_k = bspmm_t.bspmm_t(dy, p, blk_m=min(m, 16), interpret=True)
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
+    got_x = ops.bspmm_t_xla(dy, p)
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_bspmm_t_global_selection_padding():
+    """Unbalanced masks pack with zero padding at idx 0 — the scatter
+    kernel must stay exact with duplicate idx entries."""
+    key = jax.random.PRNGKey(3)
+    dy = jax.random.normal(key, (16, 64), jnp.float32)
+    wm, p = _packed(key, 32, 64, 8, 8, 0.7, selection="global")
+    want = dy @ wm.T
+    got = bspmm_t.bspmm_t(dy, p, blk_m=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=1e-4)
+
+
+def test_first_visit_flags():
+    idx = np.asarray([[0, 2], [0, 1]])
+    flags = bspmm_t.first_visit_flags(idx, kb=4)
+    np.testing.assert_array_equal(flags, [[1, 1], [0, 1]])
+
+
+def test_trainable_packed_grads():
+    """custom_vjp: grads match the dense-matmul reference exactly on
+    kept blocks and dX everywhere."""
+    key = jax.random.PRNGKey(0)
+    m, k, n, b = 16, 32, 32, 8
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    wm, p = _packed(key, k, n, b, b, 0.5)
+    c = jax.random.normal(jax.random.PRNGKey(9), (m, n))
+
+    f = ops.make_bspmm_trainable(p.idx, p.kb)
+    loss_packed = lambda x, blocks: (f(x, blocks) * c).sum()
+    loss_dense = lambda x, w: ((x @ w) * c).sum()
+
+    dx_p, dblocks = jax.grad(loss_packed, argnums=(0, 1))(x, p.blocks)
+    dx_d, dw_d = jax.grad(loss_dense, argnums=(0, 1))(x, wm)
+    np.testing.assert_allclose(np.asarray(dx_p), np.asarray(dx_d),
+                               atol=2e-4, rtol=1e-4)
+    # block grads match the dense grad at kept positions
+    dw_blocks_dense = packing.pack(
+        jnp.asarray(dw_d),
+        jnp.ones((k // b, n // b), bool), b, b)  # dense grid pack
+    # compare per kept block via unpack of the grad-packed structure
+    dw_unpacked = packing.unpack(
+        packing.PackedBCSC(blocks=dblocks, idx=p.idx, kb=p.kb))
+    kept = np.asarray(topk.expand_mask(
+        jnp.ones((k // b, n // b), bool), b, b))
+    # only where the mask kept blocks: reconstruct mask from idx/unpack
+    wm_np = np.asarray(wm)
+    mask_elem = np.asarray(packing.unpack(
+        packing.PackedBCSC(blocks=jnp.ones_like(p.blocks), idx=p.idx,
+                           kb=p.kb))) > 0
+    np.testing.assert_allclose(np.asarray(dw_unpacked)[mask_elem],
+                               np.asarray(dw_d)[mask_elem],
+                               atol=2e-4, rtol=1e-4)
+    del dw_blocks_dense, kept, wm_np

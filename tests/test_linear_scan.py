@@ -1,0 +1,89 @@
+"""Chunked linear attention == step-by-step recurrence (RWKV6 'bonus'
+and Mamba2/SSD 'full' modes), including the decay-floor numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.linear_scan import (chunked_linear_attention,
+                                      decay_floor, recurrent_step)
+
+
+def _data(seed, B=2, S=64, H=3, dk=8, dv=8, scale=2.0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, S, H, dk)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, H, dk)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, H, dv)) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, dk)) * scale)
+    u = jax.random.normal(ks[4], (H, dk)) * 0.3
+    return q, k, v, logw, u
+
+
+def _ref(q, k, v, logw, u, mode, chunk):
+    B, S, H, dk = q.shape
+    st = jnp.zeros((B, H, dk, v.shape[-1]))
+    ys = []
+    for t in range(S):
+        y, st = recurrent_step(q[:, t], k[:, t], v[:, t], logw[:, t],
+                               st, u=u, chunk=chunk, include_diag=mode)
+        ys.append(y)
+    return jnp.stack(ys, 1), st
+
+
+@pytest.mark.parametrize("mode,use_u", [("bonus", True), ("full", False)])
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_chunked_matches_recurrence(mode, use_u, chunk):
+    q, k, v, logw, u = _data(0)
+    uu = u if use_u else None
+    y_ref, st_ref = _ref(q, k, v, logw, uu, mode, chunk)
+    y, st = chunked_linear_attention(q, k, v, logw, u=uu, chunk=chunk,
+                                     include_diag=mode)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_extreme_decays_no_nan():
+    """Two-sided-clamp bug regression: extreme decays must stay finite
+    AND correct (found during development — EXPERIMENTS.md §Perf notes)."""
+    q, k, v, logw, u = _data(3, scale=4.0)   # decays down to e^-e^8
+    y, st = chunked_linear_attention(q, k, v, logw, u=u, chunk=16,
+                                     include_diag="bonus")
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(st).all())
+    y_ref, _ = _ref(q, k, v, u=u, logw=logw, mode="bonus", chunk=16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_state_continuation():
+    q, k, v, logw, u = _data(1)
+    y_full, st_full = chunked_linear_attention(q, k, v, logw, u=u,
+                                               chunk=8,
+                                               include_diag="bonus")
+    y1, st1 = chunked_linear_attention(q[:, :32], k[:, :32], v[:, :32],
+                                       logw[:, :32], u=u, chunk=8,
+                                       include_diag="bonus")
+    y2, st2 = chunked_linear_attention(q[:, 32:], k[:, 32:], v[:, 32:],
+                                       logw[:, 32:], u=u, chunk=8,
+                                       initial_state=st1,
+                                       include_diag="bonus")
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               atol=1e-5)
+
+
+def test_scalar_per_head_decay_broadcast():
+    """Mamba2-style scalar decay: logw constant across dk."""
+    q, k, v, logw, _ = _data(2)
+    logw = jnp.broadcast_to(logw[..., :1], logw.shape)
+    y, st = chunked_linear_attention(q, k, v, logw, chunk=16,
+                                     include_diag="full")
+    y_ref, st_ref = _ref(q, k, v, logw, None, "full", 16)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_decay_floor_value():
+    assert decay_floor(16) == pytest.approx(-70.0 / 16)

@@ -1,0 +1,80 @@
+"""Blocked prune-and-grow invariants (paper §3.2 / Fig. 2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk
+from repro.core.prune_grow import (BlastSpec, generate_mask,
+                                   refresh_mask_and_weight)
+
+
+def _spec(**kw):
+    base = dict(b_in=8, b_out=8, s_max=0.75, total_steps=100,
+                step_size=10, grow_frac=0.3)
+    base.update(kw)
+    return BlastSpec(**base)
+
+
+@given(seed=st.integers(0, 2**31 - 1),
+       kb=st.integers(4, 12), nb=st.integers(2, 8),
+       s_max=st.floats(0.2, 0.95))
+@settings(max_examples=25, deadline=None)
+def test_mask_sparsity_tracks_schedule(seed, kb, nb, s_max):
+    spec = _spec(s_max=s_max)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(k1, (kb * 8, nb * 8))
+    g = jax.random.normal(k2, (kb * 8, nb * 8))
+    m = generate_mask(spec, w, g, spec.total_steps)   # at full schedule
+    kept_per_col = np.asarray(m).sum(axis=0)
+    want = int(np.ceil((1 - s_max) * kb))
+    assert (kept_per_col == max(want, 1)).all()       # balanced exact
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_grown_blocks_zeroed_and_disjoint(seed):
+    spec = _spec()
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    w = jax.random.normal(k1, (64, 64))
+    g = jax.random.normal(k2, (64, 64))
+    old = generate_mask(spec, w, g, 50)
+    # different gradient at next refresh -> some regrowth
+    g2 = jax.random.normal(jax.random.PRNGKey(seed + 1), (64, 64)) * 10
+    new, w_new, grown = refresh_mask_and_weight(spec, w, g2, old, 60)
+    grown_np = np.asarray(grown)
+    # grown is a subset of new and disjoint from old
+    assert not np.any(grown_np & np.asarray(old))
+    assert np.all(~grown_np | np.asarray(new))
+    # regrown weights are zero-initialised (paper: 'initially set to 0')
+    wm = np.asarray(w_new)
+    em = np.asarray(topk.expand_mask(grown, 8, 8))
+    if em.any():
+        assert np.abs(wm[em]).max() == 0.0
+    # pruned weights are exactly zero
+    kept = np.asarray(topk.expand_mask(new, 8, 8))
+    assert np.abs(wm[~kept]).max() == 0.0
+
+
+def test_global_vs_balanced_budget():
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    g = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    for sel in ("balanced", "global"):
+        spec = _spec(selection=sel)
+        m = np.asarray(generate_mask(spec, w, g, spec.total_steps))
+        want = int(np.ceil((1 - spec.s_max) * 8)) * 8
+        assert m.sum() == want
+
+
+def test_dynamic_step_jit():
+    """The whole refresh is jittable with a TRACED step (no recompiles
+    across the schedule — the TPU adaptation's key property)."""
+    spec = _spec()
+    w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    g = jax.random.normal(jax.random.PRNGKey(1), (64, 64))
+    f = jax.jit(lambda step: generate_mask(spec, w, g, step))
+    s10 = np.asarray(f(jnp.int32(10))).sum()
+    s90 = np.asarray(f(jnp.int32(90))).sum()
+    assert s90 < s10  # sparser later in the schedule

@@ -1,0 +1,44 @@
+"""Property tests for the cubic sparsity schedule (paper Eq. 2)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import keep_count, sparsity_at
+
+
+@given(s_max=st.floats(0.05, 0.99), m=st.integers(10, 10_000),
+       d=st.integers(0, 5))
+@settings(max_examples=50, deadline=None)
+def test_endpoints(s_max, m, d):
+    d = min(d, m - 1)
+    s0 = float(sparsity_at(0, s_init=0.0, s_max=s_max, total_steps=m,
+                           decay=d))
+    sm = float(sparsity_at(m, s_init=0.0, s_max=s_max, total_steps=m,
+                           decay=d))
+    assert abs(s0 - 0.0) < 1e-5
+    assert abs(sm - s_max) < 1e-5
+
+
+@given(s_max=st.floats(0.05, 0.99), m=st.integers(10, 1000))
+@settings(max_examples=25, deadline=None)
+def test_monotone_nondecreasing(s_max, m):
+    steps = np.linspace(0, m, 17).astype(int)
+    vals = [float(sparsity_at(i, s_init=0.0, s_max=s_max,
+                              total_steps=m)) for i in steps]
+    assert all(b >= a - 1e-6 for a, b in zip(vals, vals[1:]))
+
+
+def test_decay_reaches_smax_early():
+    # with decay d, s hits s_max at step m-d (paper §5.4.3)
+    s = sparsity_at(900, s_init=0.0, s_max=0.8, total_steps=1000,
+                    decay=100)
+    assert abs(float(s) - 0.8) < 1e-6
+
+
+@given(s=st.floats(0.0, 1.0), n=st.integers(1, 512))
+@settings(max_examples=50, deadline=None)
+def test_keep_count_bounds(s, n):
+    k = int(keep_count(jnp.float32(s), n))
+    assert 1 <= k <= n
+    # never keeps fewer than the exact fraction rounded up
+    assert k >= min(n, max(1, int(np.ceil((1 - s) * n) - 1e-9)))

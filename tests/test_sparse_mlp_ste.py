@@ -1,0 +1,67 @@
+"""STE masking semantics (DESIGN.md §2): forward masks, backward passes
+the DENSE gradient (for the grow step), optimizer sees masked grads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse_mlp as sm, topk
+from repro.core.prune_grow import BlastSpec
+
+
+def test_ste_forward_masks_backward_dense(rng):
+    w = jax.random.normal(rng, (32, 32))
+    mask = jnp.zeros((2, 2), bool).at[0, 0].set(True)
+    y = sm.apply_mask_ste(w, mask, 16, 16)
+    # forward masked
+    assert float(jnp.abs(np.asarray(y)[16:, :]).max()) == 0.0
+    # backward dense: d/dw sum(y * c) = c everywhere (not masked)
+    c = jax.random.normal(rng, (32, 32))
+    g = jax.grad(lambda w: (sm.apply_mask_ste(w, mask, 16, 16) * c).sum()
+                 )(w)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(c), atol=1e-6)
+
+
+def test_mask_grads_zeroes_pruned():
+    spec = BlastSpec(b_in=16, b_out=16)
+    grads = {"layers": {"mlp": {"w_gate": jnp.ones((32, 32))}}}
+    masks = {"layers/mlp/w_gate":
+             jnp.zeros((2, 2), bool).at[0, 0].set(True)}
+    out = sm.mask_grads(masks, grads, spec)
+    g = np.asarray(out["layers"]["mlp"]["w_gate"])
+    assert g[:16, :16].min() == 1.0 and g[16:, :].max() == 0.0
+
+
+def test_glu_mlp_mask_equivalence(rng):
+    """glu_mlp with masks == glu_mlp on pre-masked weights."""
+    spec = BlastSpec(b_in=8, b_out=8, s_max=0.5)
+    d, f = 16, 32
+    ks = jax.random.split(rng, 4)
+    x = jax.random.normal(ks[0], (4, d))
+    wg = jax.random.normal(ks[1], (d, f))
+    wu = jax.random.normal(ks[2], (d, f))
+    wd = jax.random.normal(ks[3], (f, d))
+    masks = {
+        "w_gate": jnp.asarray([[True, False, True, False],
+                               [False, True, False, True]]),
+        "w_up": jnp.ones((2, 4), bool),
+        "w_down": jnp.asarray([[True, False], [False, True],
+                               [True, True], [False, False]]),
+    }
+    y1 = sm.glu_mlp(x, wg, wu, wd, masks=masks, spec=spec)
+    wg_m = topk.apply_block_mask(wg, masks["w_gate"], 8, 8)
+    wd_m = topk.apply_block_mask(wd, masks["w_down"], 8, 8)
+    y2 = sm.glu_mlp(x, wg_m, wu, wd_m)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+def test_block_dims_orientation():
+    spec = BlastSpec(b_in=128, b_out=16)
+    assert sm.block_dims_for(spec, "layers/mlp/w_gate") == (128, 16)
+    assert sm.block_dims_for(spec, "layers/mlp/w_down") == (16, 128)
+    assert sm.block_dims_for(spec, "encoder/mlp/w_out") == (16, 128)
+
+
+def test_tree_sparsity():
+    masks = {"a": jnp.zeros((4, 4), bool),
+             "b": jnp.ones((4, 4), bool)}
+    assert float(sm.tree_sparsity(masks)) == 0.5

@@ -1,0 +1,68 @@
+"""Block scoring + top-k selection invariants (paper §3.2 S())."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topk
+
+
+@given(kb=st.integers(1, 8), nb=st.integers(1, 8),
+       bi=st.sampled_from([2, 4, 8]), bo=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_block_norms_match_numpy(kb, nb, bi, bo, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(kb * bi, nb * bo)).astype(np.float32)
+    got = np.asarray(topk.block_norms(jnp.asarray(w), bi, bo))
+    want = np.zeros((kb, nb))
+    for i in range(kb):
+        for j in range(nb):
+            want[i, j] = np.linalg.norm(
+                w[i * bi:(i + 1) * bi, j * bo:(j + 1) * bo])
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@given(kb=st.integers(2, 16), nb=st.integers(1, 8),
+       k=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_balanced_keeps_exactly_k_per_col(kb, nb, k, seed):
+    k = min(k, kb)
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (kb, nb))
+    m = topk.topk_mask_per_col(scores, k)
+    assert np.asarray(m).sum(axis=0).tolist() == [k] * nb
+
+
+@given(kb=st.integers(2, 12), nb=st.integers(1, 8),
+       k=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_global_keeps_exactly_k(kb, nb, k, seed):
+    k = min(k, kb * nb)
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (kb, nb))
+    m = topk.topk_mask_global(scores, k)
+    assert int(np.asarray(m).sum()) == k
+
+
+def test_global_selects_largest():
+    scores = jnp.asarray([[5.0, 1.0], [4.0, 3.0]])
+    m = np.asarray(topk.topk_mask_global(scores, 2))
+    assert m.tolist() == [[True, False], [True, False]]
+
+
+def test_topk_leading_dims_independent():
+    scores = jnp.stack([jnp.asarray([[1.0, 9.0], [2.0, 1.0]]),
+                        jnp.asarray([[9.0, 1.0], [1.0, 2.0]])])
+    m = np.asarray(topk.topk_mask_global(scores, 2))
+    assert m.sum(axis=(1, 2)).tolist() == [2, 2]
+
+
+@given(kb=st.integers(1, 4), nb=st.integers(1, 4),
+       bi=st.sampled_from([2, 4]), bo=st.sampled_from([2, 4]))
+@settings(max_examples=20, deadline=None)
+def test_expand_apply(kb, nb, bi, bo):
+    mask = jnp.arange(kb * nb).reshape(kb, nb) % 2 == 0
+    w = jnp.ones((kb * bi, nb * bo))
+    wm = np.asarray(topk.apply_block_mask(w, mask, bi, bo))
+    frac = wm.mean()
+    want = np.asarray(mask).mean()
+    assert abs(frac - want) < 1e-6
