@@ -1,22 +1,22 @@
 """Paper Fig. 6 — end-to-end inference speedup (sparse vs dense serving)
-across block sizes and sparsity levels, CPU-scale model."""
+across block sizes and sparsity levels, CPU-scale model. Two sections:
+the jitted decode-step micro-bench, and end-to-end tokens/s through the
+continuous-batching engine (ragged prompts, chunked batched prefill)."""
 from __future__ import annotations
 
 import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import bench_cfg, replace_blast, row, timeit
 from repro.core.prune_grow import initial_mask
 from repro.models import registry
-from repro.serving import export
+from repro.serving import engine, export
 
 
-def _one(cfg, sparsity, b):
-    cfg = replace_blast(cfg, b_in=b, b_out=b, s_init=sparsity,
-                        s_max=sparsity)
-    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+def _pack(cfg, params):
     masks = {}
     import dataclasses as dc
     from repro.core import sparse_mlp as sm
@@ -25,13 +25,41 @@ def _one(cfg, sparsity, b):
         bi, bo = sm.block_dims_for(cfg.blast, path)
         pspec = dc.replace(cfg.blast, b_in=bi, b_out=bo)
         masks[path] = initial_mask(pspec, w)
-    packed = export.pack_params(cfg, params, masks, dtype=jnp.float32)
+    return export.pack_params(cfg, params, masks, dtype=jnp.float32)
+
+
+def _one(cfg, sparsity, b):
+    cfg = replace_blast(cfg, b_in=b, b_out=b, s_init=sparsity,
+                        s_max=sparsity)
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    packed = _pack(cfg, params)
     B, MAX = 8, 64
     cache = registry.init_cache(cfg, B, MAX, dtype=jnp.float32)
     tok = jnp.zeros((B, 1), jnp.int32)
     step = jax.jit(lambda p, c, t, i:
                    registry.decode_step(cfg, p, c, t, i)[0])
     return timeit(step, packed, cache, tok, jnp.int32(3))
+
+
+def _engine_tok_per_s(cfg, params, *, ragged: bool) -> float:
+    """End-to-end tokens/s through the continuous-batching engine
+    (8 requests over 4 lanes exercises admission + slot reuse)."""
+    rng = np.random.default_rng(0)
+    lens = rng.integers(8, 17, size=8) if ragged else [16] * 8
+    prompts = [rng.integers(0, cfg.vocab_size, size=(int(p),))
+               .astype(np.int32) for p in lens]
+    # one Engine for both passes: its jitted steps are per-instance, so
+    # the warm-up pass must run on the instance being measured
+    eng = engine.Engine(cfg, params, max_batch=4, max_len=48,
+                        prefill_chunk=8)
+    for p in prompts:
+        eng.submit(p, 16)
+    eng.run()                               # warm jit
+    eng.reset_stats()
+    for p in prompts:
+        eng.submit(p, 16)
+    eng.run()                               # measured
+    return eng.stats["e2e_tok_per_s"]
 
 
 def main():
@@ -50,6 +78,19 @@ def main():
             t = _one(cfg, s, b)
             row(f"decode_b{b}_s{int(s*100)}", t,
                 f"speedup={t_dense / t:.2f}x")
+
+    # ---- end-to-end serving throughput through the engine
+    tps = _engine_tok_per_s(cfg, params, ragged=False)
+    row("engine_dense", 1e6 / max(tps, 1e-9), f"e2e_tok_per_s={tps:.1f}")
+    scfg = replace_blast(cfg, b_in=32, b_out=32, s_init=0.9, s_max=0.9)
+    sparams = registry.init_params(scfg, jax.random.PRNGKey(0))
+    packed = _pack(scfg, sparams)
+    tps_p = _engine_tok_per_s(scfg, packed, ragged=False)
+    row("engine_packed_s90", 1e6 / max(tps_p, 1e-9),
+        f"e2e_tok_per_s={tps_p:.1f}")
+    tps_r = _engine_tok_per_s(scfg, packed, ragged=True)
+    row("engine_packed_s90_ragged", 1e6 / max(tps_r, 1e-9),
+        f"e2e_tok_per_s={tps_r:.1f}")
 
 
 if __name__ == "__main__":

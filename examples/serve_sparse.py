@@ -1,8 +1,11 @@
 """Batched sparse serving (paper Fig. 6 setting): one-shot magnitude
-sparsification of an assigned architecture's smoke config, then batched
-greedy decoding through the packed BSpMM path vs the dense baseline.
+sparsification of an assigned architecture's smoke config, then greedy
+decoding through the continuous-batching engine (packed BSpMM path vs
+the dense baseline). KV-cache-less families (ssm / hybrid / audio) fall
+back to the token-by-token ``serve_loop`` oracle.
 
-    PYTHONPATH=src python examples/serve_sparse.py --arch stablelm-3b
+    PYTHONPATH=src python examples/serve_sparse.py --arch stablelm-3b \
+        [--ragged] [--max-batch 2]
 """
 import argparse
 import dataclasses
@@ -16,7 +19,7 @@ from repro.configs import ARCH_IDS, get_config
 from repro.core import sparse_mlp as sm
 from repro.core.prune_grow import initial_mask
 from repro.models import registry
-from repro.serving import export, serve_loop
+from repro.serving import engine, export, serve_loop
 
 
 def main():
@@ -25,6 +28,10 @@ def main():
     ap.add_argument("--sparsity", type=float, default=0.9)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="engine lanes (default: --batch)")
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths across the batch")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -42,20 +49,33 @@ def main():
         masks[path] = fn(w)
 
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(
-        0, cfg.vocab_size, (args.batch, 8)), jnp.int32)
-    kw = {}
-    if cfg.family == "audio":
-        kw["frames"] = jnp.asarray(
-            rng.normal(size=(args.batch, 16, cfg.d_model)) * 0.02,
-            jnp.float32)
+    use_engine = registry.supports_prefill_chunk(cfg)
+    if use_engine:
+        lens = (rng.integers(4, 9, size=args.batch) if args.ragged
+                else [8] * args.batch)
+        prompts = [rng.integers(0, cfg.vocab_size, size=(int(p),))
+                   .astype(np.int32) for p in lens]
+        def run(p):
+            return engine.generate(cfg, p, prompts,
+                                   max_new_tokens=args.new_tokens,
+                                   max_batch=args.max_batch or args.batch)
+    else:
+        prompts = jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (args.batch, 8)), jnp.int32)
+        kw = {}
+        if cfg.family == "audio":
+            kw["frames"] = jnp.asarray(
+                rng.normal(size=(args.batch, 16, cfg.d_model)) * 0.02,
+                jnp.float32)
+        def run(p):
+            return serve_loop.generate(cfg, p, prompts,
+                                       max_new_tokens=args.new_tokens,
+                                       **kw)
 
     dense = export.prune_params(cfg, params, {}, dtype=jnp.float32)
-    t1, s1 = serve_loop.generate(cfg, dense, prompts,
-                                 max_new_tokens=args.new_tokens, **kw)
+    t1, s1 = run(dense)
     packed = export.pack_params(cfg, params, masks, dtype=jnp.float32)
-    t2, s2 = serve_loop.generate(cfg, packed, prompts,
-                                 max_new_tokens=args.new_tokens, **kw)
+    t2, s2 = run(packed)
     md = export.memory_report(cfg, dense)
     mp = export.memory_report(cfg, packed)
     print(f"dense : {s1['tok_per_s']:.1f} tok/s, {md['bytes']:,} B")

@@ -1,8 +1,12 @@
 """Serving launcher: load (or init) a model, prune+pack per BLaST, and
-serve batched greedy generation.
+serve greedy generation through the continuous-batching engine
+(``serving/engine.py``) — ragged prompt lengths, FIFO admission, lane
+reuse. ``--oracle`` falls back to the token-by-token
+``serve_loop.generate`` parity path.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
-        --smoke --prompt-len 16 --new-tokens 32 --batch 4 [--packed]
+        --smoke --prompt-len 16 --new-tokens 32 --batch 4 [--packed] \
+        [--max-batch 2] [--ragged] [--prefill-chunk 8]
 """
 from __future__ import annotations
 
@@ -25,12 +29,20 @@ def main():
     ap.add_argument("--packed", action="store_true")
     ap.add_argument("--sparsity", type=float, default=0.8,
                     help="one-shot magnitude sparsity when no ckpt")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="engine lanes (default: --batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--ragged", action="store_true",
+                    help="vary prompt lengths across the batch")
+    ap.add_argument("--oracle", action="store_true",
+                    help="token-by-token serve_loop.generate instead of "
+                         "the continuous-batching engine")
     args = ap.parse_args()
 
     from repro.configs import get_config
     from repro.core import sparse_mlp as sm
     from repro.models import registry
-    from repro.serving import export, serve_loop
+    from repro.serving import engine, export, serve_loop
     from repro.training import step as ts
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -62,13 +74,29 @@ def main():
     print("serving memory:", export.memory_report(cfg, params))
 
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(
-        0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
-        jnp.int32)
-    toks, stats = serve_loop.generate(cfg, params, prompts,
-                                      max_new_tokens=args.new_tokens)
-    print(f"generated {toks.shape} — {stats['tok_per_s']:.1f} tok/s")
-    print(toks[:, args.prompt_len:][:2])
+    if args.oracle or not registry.supports_prefill_chunk(cfg):
+        prompts = jnp.asarray(rng.integers(
+            0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+            jnp.int32)
+        toks, stats = serve_loop.generate(cfg, params, prompts,
+                                          max_new_tokens=args.new_tokens)
+        print(f"generated {toks.shape} — {stats['tok_per_s']:.1f} tok/s")
+        print(toks[:, args.prompt_len:][:2])
+        return
+    lens = (rng.integers(max(1, args.prompt_len // 2),
+                         args.prompt_len + 1, size=args.batch)
+            if args.ragged else [args.prompt_len] * args.batch)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(int(p),))
+               .astype(np.int32) for p in lens]
+    toks, stats = engine.generate(
+        cfg, params, prompts, max_new_tokens=args.new_tokens,
+        max_batch=args.max_batch or args.batch,
+        prefill_chunk=args.prefill_chunk)
+    print(f"generated {len(toks)} seqs — {stats['tok_per_s']:.1f} tok/s "
+          f"({stats['decode_steps']} decode steps, "
+          f"{stats['prefill_chunks']} prefill chunks)")
+    for p, t in list(zip(prompts, toks))[:2]:
+        print(t[p.size:])
 
 
 if __name__ == "__main__":

@@ -142,16 +142,38 @@ def multihead_attention(cfg, p, x, positions, *, causal=True, window=0,
     return y, (k, v)
 
 
+# Cache slots holding no real token (left-padding of ragged prompts) get
+# this sentinel "logical position": larger than any query position, so the
+# causal mask excludes them (and with it the AND-ed window mask).
+_PAD_POS = 1 << 30
+
+
+def _cache_positions(smax: int, offsets: jax.Array) -> jax.Array:
+    """(B, Smax) logical position of each cache slot for right-aligned
+    sequences: slot s holds logical token ``s - offset``; slots before
+    ``offset`` are padding (sentinel ``_PAD_POS`` → always masked)."""
+    slots = jnp.arange(smax, dtype=jnp.int32)[None, :]
+    off = offsets.astype(jnp.int32)[:, None]
+    return jnp.where(slots >= off, slots - off, jnp.int32(_PAD_POS))
+
+
 def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window=0,
-                     cross=False):
+                     cross=False, offsets=None):
     """One-token decode. x: (B,1,D); cache_k/v: (B,Smax,KV,hd); ``pos``
-    scalar int32 — the index of the new token (synchronized batch).
+    scalar int32 — the CACHE SLOT of the new token (synchronized batch).
 
     For self-attention the new K/V is written at ``pos`` (functional
     update); for cross-attention the cache is the (static) encoder memory.
+    With ``offsets`` (B,) the batch is ragged-right-aligned: lane b's
+    logical position is ``pos - offsets[b]`` (rope + masking), while the
+    cache slot stays the shared scalar ``pos``. ``offsets=None`` is
+    bitwise-identical to the historical synchronized path.
     Returns (out, new_cache_k, new_cache_v)."""
     b = x.shape[0]
-    posb = jnp.full((b, 1), pos, jnp.int32)
+    if offsets is None:
+        posb = jnp.full((b, 1), pos, jnp.int32)
+    else:
+        posb = (jnp.int32(pos) - offsets.astype(jnp.int32))[:, None]
     if cross:
         # encoder memory is already projected K/V; only project Q
         q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
@@ -169,10 +191,54 @@ def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window=0,
         cache_v = jax.lax.dynamic_update_slice(
             cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
     smax = cache_k.shape[1]
-    kpos = jnp.broadcast_to(jnp.arange(smax, dtype=jnp.int32), (b, smax))
+    if offsets is None:
+        kpos = jnp.broadcast_to(jnp.arange(smax, dtype=jnp.int32),
+                                (b, smax))
+    else:
+        kpos = _cache_positions(smax, offsets)
     # causal mask at qpos==pos also masks the garbage cache tail
     out = _scores_to_out(cfg, q, cache_k.astype(q.dtype),
                          cache_v.astype(q.dtype), posb, kpos,
                          causal=not cross, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, cache_k, cache_v
+
+
+def chunk_attention(cfg, p, x, cache_k, cache_v, slot, offsets, *,
+                    window=0, lane_mask=None):
+    """Batched chunked-prefill attention: C prompt tokens at once.
+
+    x: (B,C,D); cache_k/v: (B,Smax,KV,hd). The chunk's K/V is written at
+    cache slots [slot, slot+C); lane b's token at slot s has logical
+    position ``s - offsets[b]`` (right-aligned ragged batch — left-pad
+    slots are masked everywhere via the ``_PAD_POS`` sentinel).
+    ``lane_mask`` (B,) bool, when given, preserves the existing cache
+    rows of lanes not being prefilled (continuous batching admits new
+    sequences behind the decode frontier of running ones).
+    Returns (out (B,C,D), new_cache_k, new_cache_v)."""
+    b, c, _ = x.shape
+    slots = jnp.int32(slot) + jnp.arange(c, dtype=jnp.int32)
+    qpos = slots[None, :] - offsets.astype(jnp.int32)[:, None]   # (B,C)
+    q, k, v = _project_qkv(cfg, p, x)
+    if cfg.rope_theta > 0:
+        # pad queries have negative logical positions; clamp for rope
+        # (their K/V and outputs are masked / discarded anyway)
+        rp = jnp.maximum(qpos, 0)
+        q = apply_rope(q, rp, cfg.rope_theta)
+        k = apply_rope(k, rp, cfg.rope_theta)
+    k = k.astype(cache_k.dtype)
+    v = v.astype(cache_v.dtype)
+    if lane_mask is not None:
+        keep = lane_mask[:, None, None, None]
+        k = jnp.where(keep, k, jax.lax.dynamic_slice(
+            cache_k, (0, slot, 0, 0), k.shape))
+        v = jnp.where(keep, v, jax.lax.dynamic_slice(
+            cache_v, (0, slot, 0, 0), v.shape))
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    kpos = _cache_positions(cache_k.shape[1], offsets)
+    out = _scores_to_out(cfg, q, cache_k.astype(q.dtype),
+                         cache_v.astype(q.dtype), qpos, kpos,
+                         causal=True, window=window)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, cache_k, cache_v

@@ -59,6 +59,22 @@ def decode_step(cfg, params, cache, tokens, pos, **kw):
                                        **kw)
 
 
+def supports_prefill_chunk(cfg) -> bool:
+    return hasattr(module_for(cfg), "prefill_chunk")
+
+
+def prefill_chunk(cfg, params, cache, tokens, slot, offsets, **kw):
+    """Batched chunked prefill (KV-cache families). Writes the chunk's
+    K/V at cache slots [slot, slot+C); see transformer.prefill_chunk."""
+    mod = module_for(cfg)
+    if not hasattr(mod, "prefill_chunk"):
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no chunked prefill; use the "
+            "token-by-token serve_loop.prefill_with_decode path")
+    return mod.prefill_chunk(cfg, params, cache, tokens, slot, offsets,
+                             **kw)
+
+
 def count_params(cfg, active_only: bool = False) -> int:
     """Parameter count from the spec tree (no allocation). With
     ``active_only`` MoE expert stacks count only top_k (+shared) experts

@@ -274,10 +274,14 @@ def abstract_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
-def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None):
-    """One decode step. tokens: (B,1); pos: scalar int32 index.
+def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None,
+                offsets=None):
+    """One decode step. tokens: (B,1); pos: scalar int32 CACHE SLOT.
 
-    Returns (logits (B,1,V), new_cache)."""
+    ``offsets`` (B,) makes the batch ragged-right-aligned: lane b's
+    logical position is ``pos - offsets[b]`` while every lane writes the
+    same cache slot (engine.py). ``None`` keeps the synchronized path
+    bitwise-unchanged. Returns (logits (B,1,V), new_cache)."""
     x = embed_inputs(cfg, params, tokens)
 
     def body(carry, xs):
@@ -290,7 +294,8 @@ def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None):
                 h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
                          p_l.get("ln_attn_bias"))
                 a, nk, nv = attn.decode_attention(
-                    cfg, p_l["attn"], h, ck[i], cv[i], pos, window=win)
+                    cfg, p_l["attn"], h, ck[i], cv[i], pos, window=win,
+                    offsets=offsets)
                 x = x + a
                 h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
                          p_l.get("ln_mlp_bias"))
@@ -306,12 +311,67 @@ def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None):
                  p_l.get("ln_attn_bias"))
         a, nk, nv = attn.decode_attention(
             cfg, p_l["attn"], h, ck, cv, pos,
-            window=cfg.sliding_window)
+            window=cfg.sliding_window, offsets=offsets)
         x = x + a
         h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
                  p_l.get("ln_mlp_bias"))
         m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
         return (x + m, aux + al), (nk, nv)
+
+    ns, per = n_stacks(cfg)
+    if cfg.layer_pattern == "local_global":
+        ck = cache["k"].reshape(ns, per, *cache["k"].shape[1:])
+        cv = cache["v"].reshape(ns, per, *cache["v"].shape[1:])
+        xs = (params["layers_local"], _layer_masks(masks, "layers_local"),
+              params["layers_global"], _layer_masks(masks, "layers_global"),
+              ck, cv)
+    else:
+        xs = (params["layers"], _layer_masks(masks, "layers"),
+              cache["k"], cache["v"])
+    (x, _), (nk, nv) = jax.lax.scan(body, (x, 0.0), xs)
+    new_cache = {"k": nk.reshape(cache["k"].shape),
+                 "v": nv.reshape(cache["v"].shape)}
+    return logits_from_hidden(cfg, params, x), new_cache
+
+
+def prefill_chunk(cfg, params, cache, tokens, slot, offsets, *,
+                  masks=None, dist=None, lane_mask=None):
+    """Batched chunked prefill: run a whole (B, C) chunk of right-aligned
+    prompt tokens through every layer in one jitted call, writing K/V at
+    cache slots [slot, slot+C) — replaces the token-by-token Python
+    prefill loop (paper §5.2 serving setting, continuous batching).
+
+    tokens: (B,C); slot: scalar int32 start slot; offsets: (B,) left-pad
+    per lane (logical position of slot s is ``s - offsets[b]``);
+    ``lane_mask`` (B,) bool — lanes with False keep their existing cache
+    rows untouched (they are mid-decode while new lanes prefill behind
+    their frontier). Returns (logits (B,C,V) f32, new_cache)."""
+    x = embed_inputs(cfg, params, tokens)
+
+    def one(cfg_window, p_l, m_l, x, ck, cv):
+        h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
+                 p_l.get("ln_attn_bias"))
+        a, nk, nv = attn.chunk_attention(
+            cfg, p_l["attn"], h, ck, cv, slot, offsets,
+            window=cfg_window, lane_mask=lane_mask)
+        x = x + a
+        h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
+                 p_l.get("ln_mlp_bias"))
+        m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
+        return x + m, al, nk, nv
+
+    def body(carry, xs):
+        x, aux = carry
+        if cfg.layer_pattern == "local_global":
+            p_loc, m_loc, p_glb, m_glb, ck, cv = xs
+            x, a1, nk0, nv0 = one(cfg.sliding_window, p_loc, m_loc,
+                                  x, ck[0], cv[0])
+            x, a2, nk1, nv1 = one(0, p_glb, m_glb, x, ck[1], cv[1])
+            return (x, aux + a1 + a2), (jnp.stack([nk0, nk1]),
+                                        jnp.stack([nv0, nv1]))
+        p_l, m_l, ck, cv = xs
+        x, al, nk, nv = one(cfg.sliding_window, p_l, m_l, x, ck, cv)
+        return (x, aux + al), (nk, nv)
 
     ns, per = n_stacks(cfg)
     if cfg.layer_pattern == "local_global":

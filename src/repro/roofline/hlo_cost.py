@@ -311,7 +311,8 @@ def _operand_names(rhs: str) -> list[str]:
         return []
     out = []
     for tok in m.group(1).split(","):
-        tok = tok.strip()
+        # newer XLA prints typed operands: "f32[64,32]{1,0} %Arg_0.1"
+        tok = tok.strip().split()[-1] if tok.strip() else ""
         if tok.startswith("%"):
             out.append(tok.lstrip("%"))
         elif re.fullmatch(r"[\w\.\-]+", tok):

@@ -1,0 +1,86 @@
+"""Admission scheduling for the continuous-batching engine.
+
+The engine keeps ``max_batch`` batch lanes over a shared, time-indexed
+KV cache: every active lane decodes at the same cache-slot *frontier*,
+and a newly admitted request is prefilled *behind* the frontier — its
+prompt right-aligned to end exactly at the frontier slot, with a
+per-lane position offset making rope/masking see the true logical
+positions (engine.py). That admission rule is what the scheduler
+enforces:
+
+  * fresh batch (no active lanes): any queued request whose prompt fits
+    the cache may start; the frontier becomes the longest admitted
+    prompt length;
+  * running batch: a request joins only if its prompt fits behind the
+    current frontier (``plen <= frontier``) and the frontier still has
+    decode headroom (``frontier < max_len``).
+
+FIFO order — a head-of-line request that cannot yet join simply waits
+(it will be admitted at the next fresh batch at the latest).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (prompt is a 1-D int32 array)."""
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.size)
+
+
+class FIFOScheduler:
+    """FIFO admission with configurable ``max_batch`` / ``max_len``."""
+
+    def __init__(self, max_batch: int, max_len: int):
+        assert max_batch >= 1 and max_len >= 2
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self._queue: deque[Request] = deque()
+
+    def __len__(self) -> int:
+        return len(self._queue)
+
+    def submit(self, req: Request):
+        if req.prompt_len >= self.max_len:
+            raise ValueError(
+                f"prompt of {req.prompt_len} tokens cannot fit max_len="
+                f"{self.max_len} with room to generate")
+        self._queue.append(req)
+
+    def admit(self, n_free: int, frontier: int) -> list[Request]:
+        """Pop the FIFO prefix that may join now.
+
+        ``n_free``: free lanes; ``frontier``: current shared decode slot
+        (0 means the batch is fresh and the admitted group defines it).
+        """
+        out: list[Request] = []
+        fresh = frontier == 0
+        limit = self.max_len - 1 if fresh else frontier
+        while self._queue and len(out) < n_free:
+            head = self._queue[0]
+            if head.prompt_len > limit:
+                break
+            if not fresh and frontier >= self.max_len:
+                break
+            out.append(self._queue.popleft())
+        return out
+
+    def extend(self, reqs: Iterable[Request]):
+        for r in reqs:
+            self.submit(r)

@@ -27,6 +27,40 @@ def make_prefill_step(cfg, dist=None):
     return prefill_step
 
 
+def make_prefill_chunk_step(cfg, dist=None):
+    """Jittable chunked batched prefill (engine.py): one call runs a
+    whole (B, C) chunk of right-aligned prompt tokens through the model
+    and seeds the KV cache — the per-token Python prefill loop collapses
+    to ceil(plen / C) jitted calls.
+
+    prefill(params, cache, tokens, slot, offsets, lane_mask)
+        -> (last_logits (B, V) f32, new_cache)
+    """
+    def prefill_step(params, cache, tokens, slot, offsets, lane_mask):
+        logits, cache = registry.prefill_chunk(
+            cfg, params, cache, tokens, slot, offsets, masks=None,
+            dist=dist, lane_mask=lane_mask)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_engine_decode_step(cfg, dist=None):
+    """Greedy decode step for the continuous-batching engine: shared
+    scalar cache slot, per-lane position offsets (ragged batch).
+
+    decode(params, cache, tokens, pos, offsets)
+        -> (next (B,1) int32, new_cache, last_logits (B,V) f32)
+    """
+    def decode_step(params, cache, tokens, pos, offsets):
+        logits, cache = registry.decode_step(cfg, params, cache, tokens,
+                                             pos, masks=None, dist=dist,
+                                             offsets=offsets)
+        last = logits[:, -1]
+        nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), cache, last
+    return decode_step
+
+
 def make_decode_step(cfg, dist=None, temperature: float = 0.0):
     def decode_step(params, cache, tokens, pos, rng):
         logits, cache = registry.decode_step(cfg, params, cache, tokens,

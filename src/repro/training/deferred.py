@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import sparse_mlp as sm
-from repro.distributed.context import DistContext, shard_map
+from repro.distributed.context import (HAS_PARTIAL_MANUAL, DistContext,
+                                       shard_map)
 from repro.models import registry
 from repro.optim import adamw, compress
 from repro.training.step import TrainState, loss_fn
@@ -32,6 +33,10 @@ def make_train_step_deferred(cfg, opt_cfg: adamw.AdamWConfig, mesh,
 
     opt_state grows an 'ef' tree (error-feedback residuals) when
     compression is on — init via ``init_opt_state``."""
+    if not HAS_PARTIAL_MANUAL:
+        raise NotImplementedError(
+            "deferred reduction needs partial-manual shard_map "
+            "(axis_names), unsupported by this jax version")
     spec = cfg.blast
     dense_flags = registry.dense_layer_flags(cfg) if spec.enabled else None
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -58,6 +58,10 @@ print(json.dumps({
 
 @pytest.mark.slow
 def test_deferred_matches_gspmd_step():
+    from repro.distributed.context import HAS_PARTIAL_MANUAL
+    if not HAS_PARTIAL_MANUAL:
+        pytest.skip("partial-manual shard_map (axis_names) unsupported "
+                    "on this jax; the auto= spelling crashes XLA 0.4.x")
     env = dict(os.environ, PYTHONPATH="src" + os.pathsep
                + os.environ.get("PYTHONPATH", ""))
     out = subprocess.run([sys.executable, "-c", _SCRIPT],

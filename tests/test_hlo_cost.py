@@ -31,6 +31,8 @@ def test_xla_cost_analysis_undercounts_scans():
     f = jax.jit(lambda x: jax.lax.scan(
         lambda c, _: (c @ c, None), x, None, length=10)[0])
     xla = f.lower(x).compile().cost_analysis()
+    if isinstance(xla, list):      # older jax returned one dict per device
+        xla = xla[0]
     assert xla["flops"] < 2.1 * 2 * 128 ** 3   # ~1 body, not 10
 
 

@@ -64,6 +64,33 @@ def test_fused_glu_vs_ref(act, dtype):
                                atol=tol, rtol=tol)
 
 
+@pytest.mark.parametrize("s_gate,s_up", [(0.75, 0.25), (0.25, 0.75)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_glu_mismatched_nnz_pad_branch(s_gate, s_up, dtype):
+    """Regression for the ``pad_nnz`` alignment branch: when gate and up
+    carry different per-column block counts, the sparser operand is
+    zero-block padded (idx 0) — the fused kernel must stay exact in both
+    directions (interpret mode)."""
+    key = jax.random.PRNGKey(11)
+    m, k, n, bi, bo = 32, 64, 64, 16, 16
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    pg = _packed(jax.random.PRNGKey(3), k, n, bi, bo, s_gate, dtype)
+    pu = _packed(jax.random.PRNGKey(4), k, n, bi, bo, s_up, dtype)
+    assert pg.nnz != pu.nnz, "setup must exercise the alignment branch"
+    want = ref.fused_glu_ref(x, pg, pu).astype(jnp.float32)
+    got = pk.fused_glu(x, pg, pu, blk_m=16, interpret=True
+                       ).astype(jnp.float32)
+    tol = 5e-5 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=tol, rtol=tol)
+    # explicit alignment must be a no-op w.r.t. the kernel's own padding
+    nnz = max(pg.nnz, pu.nnz)
+    aligned = pk.fused_glu(x, packing.pad_nnz(pg, nnz),
+                           packing.pad_nnz(pu, nnz), blk_m=16,
+                           interpret=True).astype(jnp.float32)
+    np.testing.assert_array_equal(np.asarray(aligned), np.asarray(got))
+
+
 def test_sparse_mlp_full_eq1():
     """Paper Eq. (1) end-to-end: (silu(XWg) * XWu) Wd, packed."""
     key = jax.random.PRNGKey(0)

@@ -1,7 +1,7 @@
 """Property tests for the cubic sparsity schedule (paper Eq. 2)."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, strategies as st
 
 from repro.core.schedule import keep_count, sparsity_at
 
