@@ -32,6 +32,8 @@ def main():
                     help="engine lanes (default: --batch)")
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt lengths across the batch")
+    ap.add_argument("--slab-k", type=int, default=8,
+                    help="decode steps per jitted slab (1 = per-token)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -58,7 +60,8 @@ def main():
         def run(p):
             return engine.generate(cfg, p, prompts,
                                    max_new_tokens=args.new_tokens,
-                                   max_batch=args.max_batch or args.batch)
+                                   max_batch=args.max_batch or args.batch,
+                                   slab_k=args.slab_k)
     else:
         prompts = jnp.asarray(rng.integers(
             0, cfg.vocab_size, (args.batch, 8)), jnp.int32)

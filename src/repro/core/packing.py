@@ -29,6 +29,11 @@ class PackedBCSC:
     blocks: jax.Array   # (..., Nb, nnz, b_in, b_out)
     idx: jax.Array      # (..., Nb, nnz) int32
     kb: int             # number of block-rows (STATIC pytree metadata)
+    # STATIC pack-time promise: this operand's idx table is identical to
+    # its fused-GLU partner's (joint gate/up pruning), so the fused
+    # kernel may stream each X tile ONCE for both contractions. Being
+    # pytree metadata it survives jit tracing — set it via mark_joint().
+    joint: bool = False
 
     @property
     def nnz(self) -> int:
@@ -51,7 +56,20 @@ class PackedBCSC:
 
 
 jax.tree_util.register_dataclass(
-    PackedBCSC, data_fields=["blocks", "idx"], meta_fields=["kb"])
+    PackedBCSC, data_fields=["blocks", "idx"], meta_fields=["kb", "joint"])
+
+
+def mark_joint(p_gate: PackedBCSC, p_up: PackedBCSC
+               ) -> tuple[PackedBCSC, PackedBCSC]:
+    """Verify (on concrete arrays) that two fused-GLU operands share one
+    idx table and, if so, mark both ``joint`` — enabling the single-X
+    fast path of ``kernels.fused_glu``. No-op when the structures differ."""
+    import numpy as np
+    ig, iu = jax.device_get(p_gate.idx), jax.device_get(p_up.idx)
+    if ig.shape == iu.shape and bool(np.array_equal(ig, iu)):
+        return (dataclasses.replace(p_gate, joint=True),
+                dataclasses.replace(p_up, joint=True))
+    return p_gate, p_up
 
 
 def max_nnz_per_col(block_mask: jax.Array) -> int:
@@ -123,6 +141,7 @@ def pad_nnz(p: PackedBCSC, nnz: int) -> PackedBCSC:
     pad_b = [(0, 0)] * (p.blocks.ndim - 3) + [(0, nnz - cur), (0, 0),
                                               (0, 0)]
     pad_i = [(0, 0)] * (p.idx.ndim - 1) + [(0, nnz - cur)]
+    # padding edits the idx table, voiding any joint-structure promise
     return PackedBCSC(blocks=jnp.pad(p.blocks, pad_b),
                       idx=jnp.pad(p.idx, pad_i), kb=p.kb)
 

@@ -121,7 +121,73 @@ def _fused_glu_kernel(act_id, idx_g_ref, idx_u_ref, xg_ref, xu_ref,
         o_ref[...] = (a * accu_ref[...]).astype(o_ref.dtype)
 
 
+def _fused_glu_joint_kernel(act_id, idx_ref, x_ref, wg_ref, wu_ref,
+                            o_ref, accg_ref, accu_ref):
+    """Joint-structure variant: gate and up share ONE idx table, so each
+    X tile is a single operand — Mosaic DMAs it once per (i, j, k) step
+    instead of twice (the gate/up weight streams stay separate)."""
+    k = pl.program_id(2)
+    nnz = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    xt = x_ref[...]
+    accg_ref[...] += jnp.dot(xt, wg_ref[0, 0],
+                             preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(xt, wu_ref[0, 0],
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(k == nnz - 1)
+    def _flush():
+        hg = accg_ref[...]
+        if act_id == 0:
+            a = jax.nn.silu(hg)
+        elif act_id == 1:
+            a = jax.nn.gelu(hg, approximate=True)
+        else:
+            a = jax.nn.relu(hg)
+        o_ref[...] = (a * accu_ref[...]).astype(o_ref.dtype)
+
+
 _ACT_IDS = {"silu": 0, "gelu": 1, "relu": 2}
+
+
+def _fused_glu_joint(x, p_gate, p_up, *, act, blk_m, interpret):
+    """Single-X-stream fused GLU (``PackedBCSC.joint`` pack-time
+    promise: identical gate/up idx tables)."""
+    m, _ = x.shape
+    nb, nnz, b_in, b_out = p_gate.blocks.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // blk_m, nb, nnz),
+        in_specs=[
+            pl.BlockSpec((blk_m, b_in),
+                         lambda i, j, k, idx: (i, idx[j, k])),
+            pl.BlockSpec((1, 1, b_in, b_out),
+                         lambda i, j, k, idx: (j, k, 0, 0)),
+            pl.BlockSpec((1, 1, b_in, b_out),
+                         lambda i, j, k, idx: (j, k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk_m, b_out),
+                               lambda i, j, k, idx: (i, j)),
+        scratch_shapes=[pltpu.VMEM((blk_m, b_out), jnp.float32),
+                        pltpu.VMEM((blk_m, b_out), jnp.float32)],
+    )
+    kwargs = {}
+    if _CompilerParams is not None:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    kernel = functools.partial(_fused_glu_joint_kernel, _ACT_IDS[act])
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nb * b_out), x.dtype),
+        interpret=interpret,
+        **kwargs,
+    )(p_gate.idx, x, p_gate.blocks, p_up.blocks)
 
 
 @functools.partial(jax.jit,
@@ -131,8 +197,11 @@ def fused_glu(x: jax.Array, p_gate: PackedBCSC, p_up: PackedBCSC, *,
               interpret: bool = False) -> jax.Array:
     """H = act(X Wg) * (X Wu) in ONE kernel — the memory-bound
     nonlinearity fused into the compute-bound SpMM epilogue (paper
-    §3.3.3). Wg and Wu have independent sparsity structures (two scalar-
-    prefetched index tables, two accumulators)."""
+    §3.3.3). Wg and Wu normally have independent sparsity structures
+    (two scalar-prefetched index tables, two accumulators); when both
+    carry the pack-time ``joint`` promise (identical idx tables, the
+    common joint-pruning case) X becomes a single operand and each of
+    its tiles is DMA'd once instead of twice."""
     m, k_dim = x.shape
     if p_gate.nnz != p_up.nnz:   # align (zero-block padding, exact)
         from repro.core.packing import pad_nnz
@@ -143,6 +212,9 @@ def fused_glu(x: jax.Array, p_gate: PackedBCSC, p_up: PackedBCSC, *,
     assert p_up.blocks.shape == (nb, nnz, b_in, b_out)
     blk_m = min(blk_m, m)
     assert m % blk_m == 0
+    if p_gate.joint and p_up.joint:
+        return _fused_glu_joint(x, p_gate, p_up, act=act, blk_m=blk_m,
+                                interpret=interpret)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -20,6 +20,19 @@ from repro.core.packing import PackedBCSC
 from repro.kernels import bspmm as _pk
 
 
+def _contract_gathered(xg: jax.Array, blocks: jax.Array,
+                       out_dtype) -> jax.Array:
+    """(M, Nb, nnz, b_in) gathered X tiles @ (Nb, nnz, b_in, b_out)
+    blocks -> (M, N). The single source of truth for the XLA BSpMM
+    contraction — the joint fused-GLU path reuses it so both operands
+    stay bitwise-identical to ``bspmm_xla``."""
+    m = xg.shape[0]
+    nb, _, _, b_out = blocks.shape
+    y = jnp.einsum("mjnb,jnbo->mjo", xg, blocks,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(m, nb * b_out).astype(out_dtype)
+
+
 def bspmm_xla(x: jax.Array, packed: PackedBCSC) -> jax.Array:
     """Y = X @ W, packed balanced BCSC, expressed in partitionable XLA.
 
@@ -28,12 +41,9 @@ def bspmm_xla(x: jax.Array, packed: PackedBCSC) -> jax.Array:
     kernel's dataflow, with XLA's gather playing the index-map role.
     FLOPs = 2 * M * nnz * b_in * N  ==  dense * (1 - sparsity)."""
     m, k_dim = x.shape
-    nb, nnz, b_in, b_out = packed.blocks.shape
-    xb = x.reshape(m, packed.kb, b_in)
+    xb = x.reshape(m, packed.kb, packed.b_in)
     xg = jnp.take(xb, packed.idx, axis=1)        # (M, Nb, nnz, b_in)
-    y = jnp.einsum("mjnb,jnbo->mjo", xg, packed.blocks,
-                   preferred_element_type=jnp.float32)
-    return y.reshape(m, nb * b_out).astype(x.dtype)
+    return _contract_gathered(xg, packed.blocks, x.dtype)
 
 
 def bspmm(x: jax.Array, packed: PackedBCSC, *, backend: str = "xla",
@@ -45,10 +55,23 @@ def bspmm(x: jax.Array, packed: PackedBCSC, *, backend: str = "xla",
 
 
 def fused_glu(x, p_gate, p_up, *, act="silu", backend="xla", blk_m=128):
+    """act(X Wg) * (X Wu), both packed. When gate and up carry the
+    pack-time ``joint`` promise (identical idx tables — common after
+    joint pruning; ``packing.mark_joint`` / ``export.pack_params``), X
+    is gathered/streamed ONCE for both contractions."""
     if backend == "xla":
         import repro.core.sparse_mlp as sm
-        hg = bspmm_xla(x, p_gate).astype(jnp.float32)
-        hu = bspmm_xla(x, p_up).astype(jnp.float32)
+        if p_gate.joint and p_up.joint:
+            m = x.shape[0]
+            xb = x.reshape(m, p_gate.kb, p_gate.b_in)
+            xg = jnp.take(xb, p_gate.idx, axis=1)    # one gather of X
+            hg = _contract_gathered(xg, p_gate.blocks,
+                                    x.dtype).astype(jnp.float32)
+            hu = _contract_gathered(xg, p_up.blocks,
+                                    x.dtype).astype(jnp.float32)
+        else:
+            hg = bspmm_xla(x, p_gate).astype(jnp.float32)
+            hu = bspmm_xla(x, p_up).astype(jnp.float32)
         return (sm.act_fn(act)(hg) * hu).astype(x.dtype)
     return _pk.fused_glu(x, p_gate, p_up, act=act, blk_m=blk_m,
                          interpret=(backend == "pallas_interp"))

@@ -32,6 +32,9 @@ def main():
     ap.add_argument("--max-batch", type=int, default=0,
                     help="engine lanes (default: --batch)")
     ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--slab-k", type=int, default=8,
+                    help="decode steps per jitted slab (host syncs once "
+                         "per slab; 1 = per-token baseline)")
     ap.add_argument("--ragged", action="store_true",
                     help="vary prompt lengths across the batch")
     ap.add_argument("--oracle", action="store_true",
@@ -91,9 +94,9 @@ def main():
     toks, stats = engine.generate(
         cfg, params, prompts, max_new_tokens=args.new_tokens,
         max_batch=args.max_batch or args.batch,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk, slab_k=args.slab_k)
     print(f"generated {len(toks)} seqs — {stats['tok_per_s']:.1f} tok/s "
-          f"({stats['decode_steps']} decode steps, "
+          f"({stats['decode_slabs']} slabs of {args.slab_k}, "
           f"{stats['prefill_chunks']} prefill chunks)")
     for p, t in list(zip(prompts, toks))[:2]:
         print(t[p.size:])

@@ -160,20 +160,27 @@ def _cache_positions(smax: int, offsets: jax.Array) -> jax.Array:
 def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window=0,
                      cross=False, offsets=None):
     """One-token decode. x: (B,1,D); cache_k/v: (B,Smax,KV,hd); ``pos``
-    scalar int32 — the CACHE SLOT of the new token (synchronized batch).
+    is the CACHE SLOT of the new token — a scalar int32 (synchronized
+    batch: every lane writes the same slot) or a (B,) vector (per-lane
+    frontiers: lane b writes its own slot ``pos[b]``, engine slab
+    decode). Out-of-range per-lane slots (>= Smax) drop the write — the
+    engine parks finished lanes there so they stop advancing.
 
     For self-attention the new K/V is written at ``pos`` (functional
     update); for cross-attention the cache is the (static) encoder memory.
-    With ``offsets`` (B,) the batch is ragged-right-aligned: lane b's
-    logical position is ``pos - offsets[b]`` (rope + masking), while the
-    cache slot stays the shared scalar ``pos``. ``offsets=None`` is
+    With ``offsets`` (B,) the batch is ragged: lane b's logical position
+    is ``pos[b] - offsets[b]`` (rope + masking), while the cache slot
+    stays ``pos``. ``offsets=None`` with scalar ``pos`` is
     bitwise-identical to the historical synchronized path.
     Returns (out, new_cache_k, new_cache_v)."""
     b = x.shape[0]
+    per_lane = jnp.ndim(pos) > 0
+    posv = (pos.astype(jnp.int32) if per_lane
+            else jnp.full((b,), pos, jnp.int32))
     if offsets is None:
-        posb = jnp.full((b, 1), pos, jnp.int32)
+        posb = posv[:, None]
     else:
-        posb = (jnp.int32(pos) - offsets.astype(jnp.int32))[:, None]
+        posb = (posv - offsets.astype(jnp.int32))[:, None]
     if cross:
         # encoder memory is already projected K/V; only project Q
         q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
@@ -186,10 +193,19 @@ def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window=0,
         if cfg.rope_theta > 0:
             q = apply_rope(q, posb, cfg.rope_theta)
             k = apply_rope(k, posb, cfg.rope_theta)
-        cache_k = jax.lax.dynamic_update_slice(
-            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
-        cache_v = jax.lax.dynamic_update_slice(
-            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+        if per_lane:
+            # per-lane write slots: scatter row b at (b, pos[b]);
+            # lanes whose slot is out of bounds are dropped
+            lanes = jnp.arange(b)
+            cache_k = cache_k.at[lanes, posv].set(
+                k[:, 0].astype(cache_k.dtype), mode="drop")
+            cache_v = cache_v.at[lanes, posv].set(
+                v[:, 0].astype(cache_v.dtype), mode="drop")
+        else:
+            cache_k = jax.lax.dynamic_update_slice(
+                cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+            cache_v = jax.lax.dynamic_update_slice(
+                cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
     smax = cache_k.shape[1]
     if offsets is None:
         kpos = jnp.broadcast_to(jnp.arange(smax, dtype=jnp.int32),

@@ -55,6 +55,9 @@ def abstract_cache(cfg, batch, max_len, **kw):
 
 
 def decode_step(cfg, params, cache, tokens, pos, **kw):
+    """One decode step. ``pos`` is the cache write slot — scalar for a
+    synchronized batch, (B,) vector for per-lane frontiers (transformer
+    families only; see transformer.decode_step)."""
     return module_for(cfg).decode_step(cfg, params, cache, tokens, pos,
                                        **kw)
 

@@ -276,12 +276,15 @@ def abstract_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
 
 def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None,
                 offsets=None):
-    """One decode step. tokens: (B,1); pos: scalar int32 CACHE SLOT.
+    """One decode step. tokens: (B,1); pos: CACHE SLOT — scalar int32
+    (synchronized batch) or (B,) int32 vector (per-lane frontiers: lane
+    b writes slot ``pos[b]``; out-of-range slots drop the write —
+    engine slab decode parks finished lanes at Smax).
 
-    ``offsets`` (B,) makes the batch ragged-right-aligned: lane b's
-    logical position is ``pos - offsets[b]`` while every lane writes the
-    same cache slot (engine.py). ``None`` keeps the synchronized path
-    bitwise-unchanged. Returns (logits (B,1,V), new_cache)."""
+    ``offsets`` (B,) makes the batch ragged: lane b's logical position
+    is ``pos[b] - offsets[b]`` (engine.py). ``None`` with scalar ``pos``
+    keeps the synchronized path bitwise-unchanged.
+    Returns (logits (B,1,V), new_cache)."""
     x = embed_inputs(cfg, params, tokens)
 
     def body(carry, xs):

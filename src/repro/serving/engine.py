@@ -8,22 +8,34 @@ the accelerator saturated across ragged, continuously-arriving requests:
   * **lanes** — ``max_batch`` batch rows over one shared KV cache
     ``(layers, max_batch, max_len, kv, hd)``; a completed sequence frees
     its lane for the next queued request (slot reuse);
-  * **time-indexed cache** — all active lanes decode at one shared
-    cache-slot *frontier*, so the jitted decode step keeps the scalar
-    write position (bitwise-identical numerics to the oracle);
-  * **right-aligned ragged prompts** — an admitted prompt is placed so
-    it *ends* at the frontier, slots ``[frontier-plen, frontier)``; the
-    left-pad ``offset = frontier - plen`` feeds rope/masking the true
-    logical positions (models/attention.py ``_cache_positions``);
+  * **per-lane frontiers** — every lane carries its OWN cache-slot write
+    position (a ``(max_batch,)`` vector, not a shared scalar), so a
+    freed lane resets its frontier to 0 and admits a new prompt
+    immediately instead of leaking cache slots until the batch drains;
+  * **decode slabs** — the token loop runs ON-DEVICE: one jitted
+    ``lax.scan`` over ``slab_k`` greedy steps (serving/step.py) carries
+    per-lane pending token / frontier / remaining budget / live flags
+    and emits a ``(max_batch, slab_k)`` token block, so the host syncs
+    once per slab instead of once per token; lanes that hit eos, their
+    budget, or the cache end mid-slab are masked out on-device and
+    their trailing tokens discarded on the host — greedy decode stays
+    bitwise-identical to the per-token path and the oracle;
+  * **persistent device state** — pending/frontier/offsets/remaining/
+    live live on the accelerator between slabs; the host re-uploads
+    them only at admission/eviction events (never per token);
+  * **right-aligned ragged prompts** — prompts admitted together are
+    prefilled as one group in slots ``[0, W)`` (``W`` = longest prompt
+    in the group); the left-pad ``offset = W - plen`` feeds rope/masking
+    the true logical positions (models/attention.py
+    ``_cache_positions``);
   * **chunked batched prefill** — prompts enter through
     ``registry.prefill_chunk`` in whole ``(B, C)`` chunks per jitted
     call instead of one token per Python iteration; running lanes are
-    shielded from the writes by ``lane_mask``;
-  * **admission** — ``scheduler.FIFOScheduler``: a request joins a
-    running batch only if its prompt fits behind the frontier; when the
-    batch drains the frontier resets to 0 and the cache is reused
-    (stale K/V needs no zeroing — causal masking hides slots beyond the
-    frontier and offset masking hides slots before the prompt).
+    shielded from the writes by ``lane_mask`` (stale K/V needs no
+    zeroing — causal masking hides slots beyond a lane's frontier and
+    offset masking hides slots before its prompt);
+  * **admission** — ``scheduler.FIFOScheduler``: with per-lane
+    frontiers any free lane takes the head request immediately.
 
 Greedy decode only (the paper's serving benchmark); temperature sampling
 stays on the ``serve_loop`` oracle path.
@@ -39,7 +51,7 @@ import numpy as np
 
 from repro.models import registry
 from repro.serving.scheduler import FIFOScheduler, Request
-from repro.serving.step import (make_engine_decode_step,
+from repro.serving.step import (make_decode_slab_step,
                                 make_prefill_chunk_step)
 
 
@@ -59,47 +71,63 @@ class GenResult:
 @dataclasses.dataclass
 class _Lane:
     req: Request
-    offset: int                # left-pad: frontier_at_admission - plen
-    pending: int               # next token to feed the decode step
+    offset: int                # left-pad: group width - plen
     generated: list[int]
 
 
 class Engine:
     """Continuous-batching greedy generation over pruned/packed weights.
 
-    >>> eng = Engine(cfg, params, max_batch=4, max_len=64)
+    >>> eng = Engine(cfg, params, max_batch=4, max_len=64, slab_k=8)
     >>> uid = eng.submit(prompt_ids, max_new_tokens=32)
     >>> results = eng.run()          # {uid: GenResult}
+
+    ``slab_k`` is the number of decode steps per jitted slab (host syncs
+    once per slab); ``slab_k=1`` is the per-token baseline.
     """
 
     def __init__(self, cfg, params, *, max_batch: int, max_len: int,
-                 prefill_chunk: int = 16, eos_id: int | None = None,
-                 dist=None, scheduler: FIFOScheduler | None = None):
+                 prefill_chunk: int = 16, slab_k: int = 8,
+                 eos_id: int | None = None, dist=None,
+                 scheduler: FIFOScheduler | None = None):
         if not registry.supports_prefill_chunk(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} is not KV-cache servable by the "
                 "engine; use serve_loop.generate")
+        assert slab_k >= 1
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_len = max_len
         self.chunk = max(1, min(prefill_chunk, max_len))
+        self.slab_k = slab_k
         self.eos_id = eos_id
         self.scheduler = scheduler or FIFOScheduler(max_batch, max_len)
         self.cache = registry.init_cache(cfg, max_batch, max_len)
         self._prefill = jax.jit(make_prefill_chunk_step(cfg, dist=dist))
-        self._decode = jax.jit(make_engine_decode_step(cfg, dist=dist))
+        self._slab = jax.jit(make_decode_slab_step(
+            cfg, slab_k, max_len, eos_id=eos_id, dist=dist))
         self.lanes: list[_Lane | None] = [None] * max_batch
-        self.frontier = 0
+        # host mirror of the on-device per-lane state; uploaded to the
+        # device ONLY when admission/eviction edits it (self._dirty)
+        self._mirror = {
+            "pending": np.zeros(max_batch, np.int32),
+            "frontier": np.zeros(max_batch, np.int32),
+            "offsets": np.zeros(max_batch, np.int32),
+            "remaining": np.zeros(max_batch, np.int32),
+            "live": np.zeros(max_batch, bool),
+        }
+        self._dstate = None
+        self._dirty = True
         self._uid = 0
         self.reset_stats()
 
     def reset_stats(self):
         self.stats = {"prefill_chunks": 0, "prefill_tokens": 0,
-                      "decode_steps": 0, "decode_tokens": 0,
-                      "generated_tokens": 0, "prefill_s": 0.0,
-                      "decode_s": 0.0, "admitted": 0, "evicted": 0,
-                      "truncated": 0}
+                      "decode_slabs": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "generated_tokens": 0,
+                      "prefill_s": 0.0, "decode_s": 0.0, "admitted": 0,
+                      "evicted": 0, "truncated": 0}
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, max_new_tokens: int = 32,
@@ -115,13 +143,24 @@ class Engine:
     def active_lanes(self) -> list[int]:
         return [i for i, l in enumerate(self.lanes) if l is not None]
 
-    def _offsets(self) -> jnp.ndarray:
-        return jnp.asarray([l.offset if l is not None else 0
-                            for l in self.lanes], jnp.int32)
+    @property
+    def frontiers(self) -> np.ndarray:
+        """(max_batch,) per-lane cache-slot write positions."""
+        return self._mirror["frontier"].copy()
+
+    def _sync_dstate(self):
+        """Upload the host mirror as the device-side slab state — called
+        lazily, only after admission/eviction edits."""
+        if self._dirty:
+            self._dstate = {k: jnp.asarray(v)
+                            for k, v in self._mirror.items()}
+            self._dirty = False
 
     def _finish(self, i: int, truncated: bool = False) -> GenResult:
         lane = self.lanes[i]
         self.lanes[i] = None
+        self._mirror["live"][i] = False
+        self._dirty = True
         self.stats["evicted"] += 1
         self.stats["truncated"] += int(truncated)
         return GenResult(lane.req.uid, lane.req.prompt,
@@ -130,31 +169,37 @@ class Engine:
     # ----------------------------------------------------------- admission
     def _admit(self) -> None:
         free = [i for i, l in enumerate(self.lanes) if l is None]
-        reqs = self.scheduler.admit(len(free), self.frontier)
+        reqs = self.scheduler.admit(len(free))
         if not reqs:
             return
-        if self.frontier == 0:      # fresh batch: group sets the frontier
-            self.frontier = max(r.prompt_len for r in reqs)
+        # the admitted group prefills right-aligned in slots [0, W):
+        # a lane freed mid-traffic restarts at slot 0 immediately
+        width = max(r.prompt_len for r in reqs)
         new_lanes = []
+        m = self._mirror
         for r in reqs:
             i = free.pop(0)
-            self.lanes[i] = _Lane(r, self.frontier - r.prompt_len, -1, [])
+            off = width - r.prompt_len
+            self.lanes[i] = _Lane(r, off, [])
+            m["offsets"][i] = off
+            m["frontier"][i] = width
+            m["remaining"][i] = r.max_new_tokens - 1
+            m["pending"][i] = 0
+            m["live"][i] = True
             new_lanes.append(i)
+        self._dirty = True     # one upload, in step() before the slab
         self.stats["admitted"] += len(reqs)
 
-        # chunked batched prefill over [start, frontier), right-aligned;
+        # chunked batched prefill over [0, width), right-aligned; the
         # first chunk may be short (width % C), the rest are C wide so
         # the jit cache sees at most C distinct shapes.
-        maxp = max(r.prompt_len for r in reqs)
-        width = min(self.frontier, -(-maxp // self.chunk) * self.chunk)
-        start = self.frontier - width
         tokens = np.zeros((self.max_batch, width), np.int32)
         for i in new_lanes:
             p = self.lanes[i].req.prompt
             tokens[i, width - p.size:] = p
         lane_mask = np.zeros((self.max_batch,), bool)
         lane_mask[new_lanes] = True
-        offsets = self._offsets()
+        offsets = jnp.asarray(m["offsets"])
         mask_j = jnp.asarray(lane_mask)
         toks_j = jnp.asarray(tokens)
         last = None
@@ -165,64 +210,68 @@ class Engine:
         for c in sizes:
             last, self.cache = self._prefill(
                 self.params, self.cache, toks_j[:, pos:pos + c],
-                jnp.int32(start + pos), offsets, mask_j)
+                jnp.int32(pos), offsets, mask_j)
             pos += c
             self.stats["prefill_chunks"] += 1
         first = np.asarray(jax.block_until_ready(jnp.argmax(last, -1)))
         self.stats["prefill_s"] += time.time() - t0
         self.stats["prefill_tokens"] += sum(r.prompt_len for r in reqs)
         for i in new_lanes:
-            self.lanes[i].pending = int(first[i])
+            m["pending"][i] = int(first[i])
             self.lanes[i].generated.append(int(first[i]))
             self.stats["generated_tokens"] += 1
 
     def _sweep_finished(self, finished: list[GenResult]) -> None:
-        """Evict lanes whose budget is spent or that emitted eos (the
-        first prefill token may already do either)."""
+        """Evict lanes whose budget is spent, that emitted eos (the
+        first prefill token may already do either), or that ran out of
+        cache slots (per-lane truncation)."""
+        m = self._mirror
         for i in self.active_lanes:
             lane = self.lanes[i]
-            if len(lane.generated) >= lane.req.max_new_tokens or \
+            done = (len(lane.generated) >= lane.req.max_new_tokens or
                     (self.eos_id is not None and lane.generated and
-                     lane.generated[-1] == self.eos_id):
+                     lane.generated[-1] == self.eos_id))
+            if done:
                 finished.append(self._finish(i))
+            elif m["frontier"][i] >= self.max_len:
+                finished.append(self._finish(i, truncated=True))
 
     # --------------------------------------------------------------- step
     def step(self) -> list[GenResult]:
-        """One engine iteration: evict, (re)admit, one decode step.
-        Returns requests finished during this step."""
+        """One engine iteration: evict, (re)admit, one decode SLAB
+        (``slab_k`` on-device steps, one host sync). Returns requests
+        finished during this step."""
         finished: list[GenResult] = []
         self._sweep_finished(finished)
-        if not self.active_lanes:
-            self.frontier = 0           # batch drained: reuse the cache
         self._admit()
         self._sweep_finished(finished)   # e.g. max_new_tokens == 1
-        active = self.active_lanes
-        if not active:
+        if not self.active_lanes:
             return finished
-        if self.frontier >= self.max_len:   # out of cache: truncate
-            for i in active:
-                finished.append(self._finish(i, truncated=True))
-            return finished
-
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for i in active:
-            tokens[i, 0] = self.lanes[i].pending
+        self._sync_dstate()
         t0 = time.time()
-        nxt, self.cache, _ = self._decode(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.int32(self.frontier), self._offsets())
-        nxt = np.asarray(jax.block_until_ready(nxt))
+        block, self._dstate, self.cache = self._slab(
+            self.params, self.cache, self._dstate)
+        block = np.asarray(jax.block_until_ready(block))
         self.stats["decode_s"] += time.time() - t0
-        self.stats["decode_steps"] += 1
-        self.frontier += 1
-        for i in active:
-            tok = int(nxt[i, 0])
-            lane = self.lanes[i]
-            lane.pending = tok
-            lane.generated.append(tok)
-            self.stats["generated_tokens"] += 1
-            self.stats["decode_tokens"] += 1
+        self.stats["decode_slabs"] += 1
+        self.stats["decode_steps"] += self.slab_k
+        self._replay(block)
         return finished
+
+    def _replay(self, block: np.ndarray) -> None:
+        """Fold a slab's token block into the host mirror using the
+        per-lane state the slab returned (downloaded at the same sync —
+        the device's stop logic is the single source of truth): lane i
+        kept exactly ``new_frontier - old_frontier`` tokens; anything it
+        emitted after its stop point is discarded here."""
+        new = {k: np.array(v) for k, v in self._dstate.items()}
+        for i in self.active_lanes:
+            kept = int(new["frontier"][i] - self._mirror["frontier"][i])
+            self.lanes[i].generated.extend(
+                int(t) for t in block[i, :kept])
+            self.stats["generated_tokens"] += kept
+            self.stats["decode_tokens"] += kept
+        self._mirror = new
 
     # ---------------------------------------------------------------- run
     def run(self) -> dict[int, GenResult]:
@@ -245,22 +294,23 @@ class Engine:
 
 def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
              max_len: int | None = None, eos_id: int | None = None,
-             prefill_chunk: int = 16, max_batch: int | None = None,
-             dist=None):
+             prefill_chunk: int = 16, slab_k: int = 8,
+             max_batch: int | None = None, dist=None):
     """Batch-convenience wrapper: list of ragged 1-D prompts (or a 2-D
     equal-length array) -> (list of per-request token arrays, stats).
 
     Greedy; equal-length batches are bitwise-identical to
-    ``serve_loop.generate`` (tests/test_serving_engine.py). A request
-    that runs out of cache headroom returns fewer than
-    ``max_new_tokens`` tokens — ``stats["truncated"]`` counts them
-    (use ``Engine`` directly for per-request ``GenResult.truncated``)."""
+    ``serve_loop.generate`` for every slab size
+    (tests/test_serving_engine.py). A request that runs out of cache
+    headroom returns fewer than ``max_new_tokens`` tokens —
+    ``stats["truncated"]`` counts them (use ``Engine`` directly for
+    per-request ``GenResult.truncated``)."""
     prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
     maxp = max(p.size for p in prompts)
     max_len = max_len or (maxp + max_new_tokens)
     eng = Engine(cfg, params, max_batch=max_batch or len(prompts),
                  max_len=max_len, prefill_chunk=prefill_chunk,
-                 eos_id=eos_id, dist=dist)
+                 slab_k=slab_k, eos_id=eos_id, dist=dist)
     uids = [eng.submit(p, max_new_tokens) for p in prompts]
     res = eng.run()
     return [res[u].tokens for u in uids], eng.stats

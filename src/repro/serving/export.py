@@ -31,7 +31,11 @@ def prune_params(cfg, params, masks, dtype=jnp.bfloat16):
 
 def pack_params(cfg, params, masks, dtype=jnp.bfloat16):
     """Sparse leaves -> PackedBCSC (static nnz = max kept per column,
-    uniform under balanced selection)."""
+    uniform under balanced selection).
+
+    Gate/up pairs whose masks coincide (joint pruning) are marked
+    ``joint`` so the fused GLU kernels stream each X tile once
+    (``packing.mark_joint``)."""
     pruned = prune_params(cfg, params, masks, dtype)
     out = pruned
     for path, m in masks.items():
@@ -41,6 +45,17 @@ def pack_params(cfg, params, masks, dtype=jnp.bfloat16):
         nnz = int(counts.max())
         p = packing.pack_stacked(w, m, bi, bo, nnz)
         out = sm.set_path(out, path, p)
+    for gpath in masks:
+        leaf = gpath.split("/")[-1]
+        if leaf not in ("w_gate", "ws_gate"):
+            continue
+        upath = gpath[:-len(leaf)] + leaf.replace("gate", "up")
+        if upath not in masks:
+            continue
+        pg, pu = packing.mark_joint(sm.get_path(out, gpath),
+                                    sm.get_path(out, upath))
+        out = sm.set_path(out, gpath, pg)
+        out = sm.set_path(out, upath, pu)
     return out
 
 

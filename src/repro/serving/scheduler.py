@@ -1,22 +1,19 @@
 """Admission scheduling for the continuous-batching engine.
 
-The engine keeps ``max_batch`` batch lanes over a shared, time-indexed
-KV cache: every active lane decodes at the same cache-slot *frontier*,
-and a newly admitted request is prefilled *behind* the frontier — its
-prompt right-aligned to end exactly at the frontier slot, with a
-per-lane position offset making rope/masking see the true logical
-positions (engine.py). That admission rule is what the scheduler
-enforces:
+The engine keeps ``max_batch`` batch lanes over a shared KV cache with a
+PER-LANE cache-slot *frontier*: each lane writes its own next slot, so a
+lane freed by a finished sequence resets its frontier to 0 and can take
+a new prompt immediately — no waiting for the whole batch to drain
+(engine.py). Admission is therefore purely lane-based:
 
-  * fresh batch (no active lanes): any queued request whose prompt fits
-    the cache may start; the frontier becomes the longest admitted
-    prompt length;
-  * running batch: a request joins only if its prompt fits behind the
-    current frontier (``plen <= frontier``) and the frontier still has
-    decode headroom (``frontier < max_len``).
+  * any free lane may take the head request (its prompt always fits a
+    fresh lane — ``submit`` rejects prompts with no decode headroom);
+  * requests admitted together are prefilled as one right-aligned group
+    (chunked batched prefill); the group's padding becomes each lane's
+    position ``offset``.
 
-FIFO order — a head-of-line request that cannot yet join simply waits
-(it will be admitted at the next fresh batch at the latest).
+FIFO order — requests are popped strictly in submission order, up to the
+number of free lanes.
 """
 from __future__ import annotations
 
@@ -63,21 +60,12 @@ class FIFOScheduler:
                 f"{self.max_len} with room to generate")
         self._queue.append(req)
 
-    def admit(self, n_free: int, frontier: int) -> list[Request]:
-        """Pop the FIFO prefix that may join now.
-
-        ``n_free``: free lanes; ``frontier``: current shared decode slot
-        (0 means the batch is fresh and the admitted group defines it).
-        """
+    def admit(self, n_free: int) -> list[Request]:
+        """Pop the FIFO prefix that may start now: with per-lane
+        frontiers every free lane starts at slot 0, so any queued
+        request joins as soon as a lane is free."""
         out: list[Request] = []
-        fresh = frontier == 0
-        limit = self.max_len - 1 if fresh else frontier
         while self._queue and len(out) < n_free:
-            head = self._queue[0]
-            if head.prompt_len > limit:
-                break
-            if not fresh and frontier >= self.max_len:
-                break
             out.append(self._queue.popleft())
         return out
 

@@ -44,21 +44,58 @@ def make_prefill_chunk_step(cfg, dist=None):
     return prefill_step
 
 
-def make_engine_decode_step(cfg, dist=None):
-    """Greedy decode step for the continuous-batching engine: shared
-    scalar cache slot, per-lane position offsets (ragged batch).
+def make_decode_slab_step(cfg, k_steps: int, max_len: int,
+                          eos_id: int | None = None, dist=None):
+    """Jitted decode SLAB: one ``lax.scan`` over ``k_steps`` greedy
+    decode steps, the whole token loop on-device — the host syncs once
+    per slab instead of once per token (engine.py).
 
-    decode(params, cache, tokens, pos, offsets)
-        -> (next (B,1) int32, new_cache, last_logits (B,V) f32)
+    The carried per-lane state (all (B,) vectors, persistent on-device
+    between slabs) is a dict:
+
+      ``pending``   int32  next token to feed each lane
+      ``frontier``  int32  cache slot the lane writes next
+      ``offsets``   int32  left-pad of the lane's prompt (rope/masking)
+      ``remaining`` int32  decode tokens the lane may still emit
+      ``live``      bool   lane still decoding
+
+    A lane dies mid-slab when it emits ``eos_id``, exhausts its budget,
+    or runs out of cache (``frontier`` reaching ``max_len``); a dead
+    lane is parked at write slot ``max_len`` (the scatter drops it), its
+    frontier/remaining freeze, and its emitted tokens after the stop
+    point are garbage the host discards — so greedy decode stays
+    bitwise-identical to the per-token path.
+
+    slab(params, cache, state) -> (tokens (B, k_steps) int32,
+                                   new_state, new_cache)
     """
-    def decode_step(params, cache, tokens, pos, offsets):
-        logits, cache = registry.decode_step(cfg, params, cache, tokens,
-                                             pos, masks=None, dist=dist,
-                                             offsets=offsets)
-        last = logits[:, -1]
-        nxt = jnp.argmax(last, axis=-1)
-        return nxt[:, None].astype(jnp.int32), cache, last
-    return decode_step
+    def slab(params, cache, state):
+        offsets = state["offsets"]
+
+        def body(carry, _):
+            cache, pending, frontier, remaining, live = carry
+            write_pos = jnp.where(live, frontier, jnp.int32(max_len))
+            logits, cache = registry.decode_step(
+                cfg, params, cache, pending[:, None], write_pos,
+                masks=None, dist=dist, offsets=offsets)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            frontier = jnp.where(live, frontier + 1, frontier)
+            remaining = jnp.where(live, remaining - 1, remaining)
+            died = (remaining <= 0) | (frontier >= max_len)
+            if eos_id is not None:
+                died |= nxt == eos_id
+            live = live & ~died
+            pending = jnp.where(live, nxt, pending)
+            return (cache, pending, frontier, remaining, live), nxt
+
+        carry = (cache, state["pending"], state["frontier"],
+                 state["remaining"], state["live"])
+        (cache, pending, frontier, remaining, live), toks = jax.lax.scan(
+            body, carry, None, length=k_steps)
+        state = dict(state, pending=pending, frontier=frontier,
+                     remaining=remaining, live=live)
+        return toks.T, state, cache
+    return slab
 
 
 def make_decode_step(cfg, dist=None, temperature: float = 0.0):

@@ -91,6 +91,79 @@ def test_fused_glu_mismatched_nnz_pad_branch(s_gate, s_up, dtype):
     np.testing.assert_array_equal(np.asarray(aligned), np.asarray(got))
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_glu_joint_fast_path(dtype):
+    """Joint gate/up structure (identical idx tables): mark_joint takes
+    the single-X-stream kernel variant — results must be exact against
+    ref AND bitwise-equal to the two-stream path in both backends."""
+    key = jax.random.PRNGKey(21)
+    m, k, n, bi, bo = 32, 64, 64, 16, 16
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(dtype)
+    pg = _packed(jax.random.PRNGKey(5), k, n, bi, bo, 0.5, dtype)
+    # same mask structure as the gate, different block values
+    wu = jax.random.normal(jax.random.PRNGKey(6), pg.blocks.shape,
+                           jnp.float32).astype(dtype)
+    pu = packing.PackedBCSC(blocks=wu, idx=pg.idx, kb=pg.kb)
+    jg, ju = packing.mark_joint(pg, pu)
+    assert jg.joint and ju.joint
+    for backend_pair in ("pallas", "xla"):
+        if backend_pair == "pallas":
+            two = pk.fused_glu(x, pg, pu, blk_m=16, interpret=True)
+            one = pk.fused_glu(x, jg, ju, blk_m=16, interpret=True)
+        else:
+            two = ops.fused_glu(x, pg, pu, backend="xla")
+            one = ops.fused_glu(x, jg, ju, backend="xla")
+        np.testing.assert_array_equal(np.asarray(one), np.asarray(two))
+        want = ref.fused_glu_ref(x, pg, pu).astype(jnp.float32)
+        tol = 5e-5 if dtype == jnp.float32 else 0.15
+        np.testing.assert_allclose(np.asarray(one, jnp.float32),
+                                   np.asarray(want), atol=tol, rtol=tol)
+
+
+def test_mark_joint_rejects_differing_structure():
+    """mark_joint is a verified promise: different masks stay unmarked
+    (and the fused kernel keeps the two-stream path)."""
+    k, n, bi, bo = 64, 64, 16, 16
+    pg = _packed(jax.random.PRNGKey(7), k, n, bi, bo, 0.5, jnp.float32)
+    pu = _packed(jax.random.PRNGKey(8), k, n, bi, bo, 0.5, jnp.float32)
+    assert not np.array_equal(np.asarray(pg.idx), np.asarray(pu.idx))
+    g2, u2 = packing.mark_joint(pg, pu)
+    assert not g2.joint and not u2.joint
+
+
+def test_pack_params_marks_joint_pairs():
+    """export.pack_params flags gate/up pairs that were pruned with the
+    SAME mask (joint pruning) and leaves differing pairs unmarked."""
+    import dataclasses as dc
+
+    from conftest import tiny_cfg
+    from repro.core import sparse_mlp as sm
+    from repro.core.prune_grow import initial_mask
+    from repro.models import registry
+    from repro.serving import export
+
+    cfg = tiny_cfg()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    masks = {}
+    for path in registry.sparse_paths(cfg):
+        w = sm.get_path(params, path)
+        bi, bo = sm.block_dims_for(cfg.blast, path)
+        pspec = dc.replace(cfg.blast, s_init=0.5, s_max=0.5, b_in=bi,
+                           b_out=bo)
+        fn = lambda wi: initial_mask(pspec, wi)
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        masks[path] = fn(w)
+    # joint pruning: force the up mask to equal the gate mask
+    masks["layers/mlp/w_up"] = masks["layers/mlp/w_gate"]
+    packed = export.pack_params(cfg, params, masks, dtype=jnp.float32)
+    pg = sm.get_path(packed, "layers/mlp/w_gate")
+    pu = sm.get_path(packed, "layers/mlp/w_up")
+    pd = sm.get_path(packed, "layers/mlp/w_down")
+    assert pg.joint and pu.joint and not pd.joint
+    np.testing.assert_array_equal(np.asarray(pg.idx), np.asarray(pu.idx))
+
+
 def test_sparse_mlp_full_eq1():
     """Paper Eq. (1) end-to-end: (silu(XWg) * XWu) Wd, packed."""
     key = jax.random.PRNGKey(0)
