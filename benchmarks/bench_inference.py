@@ -1,15 +1,21 @@
 """Paper Fig. 6 — end-to-end inference speedup (sparse vs dense serving)
-across block sizes and sparsity levels, CPU-scale model. Three sections:
-the jitted decode-step micro-bench, end-to-end tokens/s through the
+across block sizes and sparsity levels, CPU-scale model. Sections: the
+jitted decode-step micro-bench, end-to-end tokens/s through the
 continuous-batching engine across decode SLAB sizes (K=1 is the
-per-token baseline: one host sync per token), and a ``BENCH_serving.json``
-artifact so the serving perf trajectory is tracked PR over PR.
+per-token baseline: one host sync per token) for BOTH KV-cache layouts
+(paged page-pool vs contiguous slab), and a ``BENCH_serving.json``
+artifact — tok/s, peak KV-cache bytes, and block-table page-read
+counters — so the serving perf trajectory is tracked PR over PR (CI
+uploads it on every run).
 
     PYTHONPATH=src:. python benchmarks/bench_inference.py \
         [--smoke] [--out BENCH_serving.json]
 
 ``--smoke`` runs a tiny config through the same dispatch path (CI guard
-against decode-loop regressions; kernels on the CPU-safe XLA backend).
+against decode-loop regressions; kernels on the CPU-safe XLA backend)
+and HARD-ASSERTS the paged engine's guarantees: greedy tokens
+bitwise-equal to the contiguous engine, and strictly fewer pages read
+than a dense ``max_len`` scan at short live lengths.
 """
 from __future__ import annotations
 
@@ -55,7 +61,8 @@ def _one(cfg, sparsity, b):
 
 def _engine_stats(cfg, params, *, slab_k: int, ragged: bool,
                   n_req: int = 8, max_batch: int = 4, max_len: int = 64,
-                  new_tokens: int = 33, reps: int = 3) -> dict:
+                  new_tokens: int = 33, reps: int = 3,
+                  paged: bool = True, page_size: int = 16) -> dict:
     """Serving stats through the continuous-batching engine (requests
     over fewer lanes exercises admission + per-lane slot reuse).
     ``new_tokens=33`` -> 32 decode steps/request, divisible by every
@@ -68,7 +75,8 @@ def _engine_stats(cfg, params, *, slab_k: int, ragged: bool,
     # one Engine for all passes: its jitted steps are per-instance, so
     # the warm-up pass must run on the instance being measured
     eng = engine.Engine(cfg, params, max_batch=max_batch,
-                        max_len=max_len, prefill_chunk=8, slab_k=slab_k)
+                        max_len=max_len, prefill_chunk=8, slab_k=slab_k,
+                        paged=paged, page_size=page_size)
     for p in prompts:
         eng.submit(p, new_tokens)
     eng.run()                               # warm jit
@@ -85,38 +93,75 @@ def _engine_stats(cfg, params, *, slab_k: int, ragged: bool,
 
 def _serving_sweep(cfg, label: str, params, *, sparsity: float,
                    results: list, ragged: bool = False,
-                   slab_sizes=SLAB_SIZES, **kw) -> None:
+                   slab_sizes=SLAB_SIZES, paged: bool = True,
+                   **kw) -> None:
     """One engine workload across slab sizes; K=1 is the per-token
     baseline (one host sync per generated token)."""
+    cachetag = "paged" if paged else "contig"
     for k in slab_sizes:
-        st = _engine_stats(cfg, params, slab_k=k, ragged=ragged, **kw)
-        name = f"engine_{label}_k{k}" + ("_ragged" if ragged else "")
+        st = _engine_stats(cfg, params, slab_k=k, ragged=ragged,
+                           paged=paged, **kw)
+        name = (f"engine_{label}_{cachetag}_k{k}"
+                + ("_ragged" if ragged else ""))
         row(name, 1e6 / max(st["e2e_tok_per_s"], 1e-9),
             f"decode_tok_per_s={st['tok_per_s']:.1f} "
             f"e2e_tok_per_s={st['e2e_tok_per_s']:.1f} "
-            f"syncs={st['decode_slabs']}")
+            f"syncs={st['decode_slabs']} "
+            f"peak_kv_kib={st['peak_kv_bytes'] / 1024:.1f}")
         results.append({
             "name": name, "slab_k": k, "ragged": ragged,
             "batch": kw.get("max_batch", 4), "sparsity": sparsity,
+            "paged": paged,
             "decode_tok_per_s": st["tok_per_s"],
             "e2e_tok_per_s": st["e2e_tok_per_s"],
             "decode_tokens": st["decode_tokens"],
             "host_syncs": st["decode_slabs"],
+            "peak_kv_bytes": st["peak_kv_bytes"],
+            "kv_bytes_contiguous_equiv": st["kv_bytes_contiguous_equiv"],
+            "pages_read": st["pages_read"],
+            "pages_read_dense_equiv": st["pages_read_dense_equiv"],
             "baseline_per_token": k == 1,
         })
 
 
+def _check_paged_guarantees(cfg, params) -> None:
+    """--smoke hard asserts: the paged engine is not just fast, it is
+    CORRECT (bitwise token parity with the contiguous engine) and
+    actually SPARSE in its reads (block-table gather touches fewer
+    pages than a dense max_len scan at short live lengths)."""
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32) for n in (8, 12, 6, 9)]
+    kw = dict(max_new_tokens=9, max_len=128, prefill_chunk=8, slab_k=4,
+              max_batch=2)
+    dense, _ = engine.generate(cfg, params, prompts, paged=False, **kw)
+    paged, st = engine.generate(cfg, params, prompts, paged=True,
+                                page_size=8, **kw)
+    for a, b in zip(dense, paged):
+        np.testing.assert_array_equal(a, b)
+    assert 0 < st["pages_read"] < st["pages_read_dense_equiv"], st
+    assert st["peak_kv_bytes"] < st["kv_bytes_contiguous_equiv"], st
+    print("# paged-vs-contiguous parity OK: "
+          f"pages_read={st['pages_read']} "
+          f"dense_equiv={st['pages_read_dense_equiv']} "
+          f"peak_kv_bytes={st['peak_kv_bytes']} "
+          f"contig_bytes={st['kv_bytes_contiguous_equiv']}")
+
+
 def main(smoke: bool = False, out: str = "BENCH_serving.json"):
     results: list[dict] = []
+    check = None
     if smoke:
         # tiny config through the REAL dispatch path: decode slabs,
-        # per-lane frontiers, packed XLA-backend kernels
+        # per-lane frontiers, paged pool, packed XLA-backend kernels
         cfg = bench_cfg(num_layers=1, d_model=64, d_ff=128,
                         vocab_size=128, num_heads=2, num_kv_heads=2)
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
-        _serving_sweep(cfg, "dense", params, sparsity=0.0,
-                       results=results, slab_sizes=(1, 4), n_req=4,
-                       max_batch=2, new_tokens=9)
+        check = (cfg, params)
+        for paged in (True, False):
+            _serving_sweep(cfg, "dense", params, sparsity=0.0,
+                           results=results, slab_sizes=(1, 4), n_req=4,
+                           max_batch=2, new_tokens=9, paged=paged)
         scfg = replace_blast(cfg, s_init=0.7, s_max=0.7)
         packed = _pack(scfg, registry.init_params(
             scfg, jax.random.PRNGKey(0)))
@@ -139,15 +184,18 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json"):
                 row(f"decode_b{b}_s{int(s*100)}", t,
                     f"speedup={t_dense / t:.2f}x")
 
-        # ---- end-to-end serving throughput across decode slab sizes
-        _serving_sweep(cfg, "dense", params, sparsity=0.0,
-                       results=results)
+        # ---- end-to-end serving throughput across decode slab sizes,
+        # paged pool vs contiguous slab (same workload, same weights)
+        for paged in (True, False):
+            _serving_sweep(cfg, "dense", params, sparsity=0.0,
+                           results=results, paged=paged)
         scfg = replace_blast(cfg, b_in=32, b_out=32, s_init=0.9,
                              s_max=0.9)
         sparams = registry.init_params(scfg, jax.random.PRNGKey(0))
         packed = _pack(scfg, sparams)
-        _serving_sweep(scfg, "packed_s90", packed, sparsity=0.9,
-                       results=results)
+        for paged in (True, False):
+            _serving_sweep(scfg, "packed_s90", packed, sparsity=0.9,
+                           results=results, paged=paged)
         _serving_sweep(scfg, "packed_s90", packed, sparsity=0.9,
                        results=results, ragged=True)
 
@@ -156,13 +204,18 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json"):
         json.dump(artifact, f, indent=2)
         f.write("\n")
     print(f"# wrote {out} ({len(results)} serving rows)")
+    if check is not None:
+        # hard asserts AFTER the artifact lands on disk, so the CI
+        # upload preserves the measured rows even when parity breaks —
+        # exactly the runs where the trajectory matters most
+        _check_paged_guarantees(*check)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config + small workload (CI dispatch-"
-                         "path guard)")
+                         "path guard incl. paged-vs-contiguous parity)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
     main(smoke=args.smoke, out=args.out)

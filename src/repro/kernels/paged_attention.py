@@ -1,0 +1,148 @@
+"""Paged-KV decode attention as a Pallas TPU blocked-gather kernel.
+
+The XLA paged path (models/attention.py ``gather_pages`` +
+``_scores_to_out``) materialises a (B, R*ps, KV, hd) gathered copy of
+each lane's live pages in HBM before the attention core reads it — the
+bytes are right, but they move twice. This kernel reuses the BCSC-style
+block-gather machinery of ``bspmm.py``: the scalar-prefetched block
+table drives the ``BlockSpec.index_map`` of the K/V pool operands, so
+Mosaic's pipeline DMAs each live page HBM->VMEM exactly once, straight
+into a flash-decode online-softmax accumulation — no gathered
+intermediate ever exists (the paper's "only necessary blocks are
+loaded", applied to the KV cache instead of the weights).
+
+grid = (lanes, kv heads, pages); the page axis is ``arbitrary`` (it
+carries the running max / sum / accumulator scratch), lanes and heads
+are parallel. Masking (causal, window, ragged left-pad) arrives as an
+additive-bias row per (lane, slot) — precomputed in XLA from the same
+``_cache_positions`` logic as the dense path, so the two paths mask
+identically.
+
+Validated in interpret mode against the XLA gather path
+(tests/test_paged_kv.py); the engine picks it via
+``attn_backend='pallas'``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
+
+def _paged_decode_kernel(scale, softcap, bt_ref, q_ref, k_ref, v_ref,
+                         bias_ref, o_ref, acc_ref, m_ref, l_ref):
+    """One (lane b, kv head h, page j) grid step: fold pool page
+    bt[b, j] into lane b's online softmax for head h."""
+    j = pl.program_id(2)
+    npg = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                                  # (G, hd)
+    k = k_ref[0, :, 0, :]                            # (ps, hd)
+    v = v_ref[0, :, 0, :]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    bias = bias_ref[0]                               # (ps,) 0 / NEG_INF
+    valid = bias > NEG_INF / 2
+    s = jnp.where(valid[None, :], s, NEG_INF)        # (G, ps)
+
+    m_prev = m_ref[...]                              # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)            # fully-masked pages
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == npg - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)   # all-masked lane: garbage,
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)  # discarded
+
+
+def paged_flash_decode(q4, pool_k, pool_v, block_tables, bias, *,
+                       scale: float, softcap: float = 0.0,
+                       interpret: bool = False) -> jax.Array:
+    """q4: (B, KV, G, hd); pool_k/v: (n_pages, ps, KV, hd);
+    block_tables: (B, R) int32 — the lanes' first R logical pages;
+    bias: (B, R*ps) f32, 0 where the slot may be attended, NEG_INF
+    where masked. Returns (B, KV, G, hd) f32."""
+    b, kvh, g, hd = q4.shape
+    ps = pool_k.shape[1]
+    r = block_tables.shape[1]
+    assert bias.shape == (b, r * ps), (bias.shape, b, r, ps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, r),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd),
+                         lambda i, h, j, bt: (i, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda i, h, j, bt: (bt[i, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda i, h, j, bt: (bt[i, j], 0, h, 0)),
+            pl.BlockSpec((1, ps), lambda i, h, j, bt: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda i, h, j, bt: (i, h, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, hd), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32)],
+    )
+    kwargs = {}
+    if _CompilerParams is not None:
+        kwargs["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    kernel = functools.partial(_paged_decode_kernel, scale, softcap)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        interpret=interpret,
+        **kwargs,
+    )(block_tables, q4, pool_k, pool_v, bias)
+
+
+def mask_bias(posb, kpos, window: int = 0) -> jax.Array:
+    """(B,1) query positions + (B,S) slot positions -> (B,S) additive
+    bias: 0 where the causal (AND optional window) mask admits the slot,
+    NEG_INF elsewhere — the dense path's where-mask as a bias row."""
+    mask = posb >= kpos
+    if window:
+        mask &= posb - kpos < window
+    return jnp.where(mask, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def paged_decode_attn(cfg, q, pool_k, pool_v, block_tables, posb, kpos,
+                      *, window: int = 0,
+                      interpret: bool = False) -> jax.Array:
+    """models/attention.py adapter: q (B,1,H,hd) -> out (B,1,H,hd),
+    matching ``_scores_to_out``'s grouped layout and mixed precision."""
+    b, _, h, hd = q.shape
+    kvh = pool_k.shape[2]
+    g = h // kvh
+    scale = cfg.attn_scale or 1.0 / math.sqrt(hd)
+    q4 = q.reshape(b, kvh, g, hd)
+    bias = mask_bias(posb, kpos, window)
+    out = paged_flash_decode(
+        q4, pool_k, pool_v, block_tables, bias, scale=scale,
+        softcap=float(cfg.attn_logit_softcap or 0.0), interpret=interpret)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)

@@ -40,6 +40,14 @@ def main():
     ap.add_argument("--oracle", action="store_true",
                     help="token-by-token serve_loop.generate instead of "
                          "the continuous-batching engine")
+    ap.add_argument("--contiguous", action="store_true",
+                    help="dense (B, max_len) KV slab instead of the "
+                         "paged page-pool cache (parity baseline)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="cache slots per KV pool page (paged mode)")
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="KV pool pages (default: contiguous-equivalent "
+                         "max_batch * ceil(max_len / page_size))")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -94,10 +102,13 @@ def main():
     toks, stats = engine.generate(
         cfg, params, prompts, max_new_tokens=args.new_tokens,
         max_batch=args.max_batch or args.batch,
-        prefill_chunk=args.prefill_chunk, slab_k=args.slab_k)
+        prefill_chunk=args.prefill_chunk, slab_k=args.slab_k,
+        paged=not args.contiguous, page_size=args.page_size,
+        n_pages=args.n_pages or None)
     print(f"generated {len(toks)} seqs — {stats['tok_per_s']:.1f} tok/s "
           f"({stats['decode_slabs']} slabs of {args.slab_k}, "
-          f"{stats['prefill_chunks']} prefill chunks)")
+          f"{stats['prefill_chunks']} prefill chunks, "
+          f"peak_kv_kib={stats['peak_kv_bytes'] / 1024:.1f})")
     for p, t in list(zip(prompts, toks))[:2]:
         print(t[p.size:])
 

@@ -11,6 +11,7 @@ padding is numerically exact) — DESIGN.md §5.
 from __future__ import annotations
 
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +20,12 @@ from repro.models.layers import apply_rope, rmsnorm, softcap
 from repro.models.params import ParamSpec
 
 NEG_INF = -1e30
+
+# Read ONCE at import: the pre-optimization dry-run variant. A per-call
+# env read inside traced code was silently baked into whatever jit cache
+# existed when the function was first traced — flipping the env var
+# mid-process did nothing (or worse, half of it).
+DRYRUN_BASELINE = bool(os.environ.get("DRYRUN_BASELINE"))
 
 
 def eff_heads(cfg) -> tuple[int, int]:
@@ -82,13 +89,12 @@ def _scores_to_out(cfg, q, k, v, q_pos, k_pos, causal, window):
     accumulate in f32 via preferred_element_type (a wholesale
     cache->f32 convert was the #1 byte contributor of the decode
     roofline — EXPERIMENTS.md §Perf iteration 1)."""
-    import os
     b, sq, h, hd = q.shape
     kv = k.shape[2]
     g = h // kv
     scale = cfg.attn_scale or 1.0 / math.sqrt(hd)
     qg = q.reshape(b, sq, kv, g, hd)
-    if os.environ.get("DRYRUN_BASELINE"):   # pre-optimization variant
+    if DRYRUN_BASELINE:                     # pre-optimization variant
         logits = jnp.einsum("bqhgk,bshk->bhgqs", qg.astype(jnp.float32),
                             k.astype(jnp.float32)) * scale
     else:
@@ -102,7 +108,7 @@ def _scores_to_out(cfg, q, k, v, q_pos, k_pos, causal, window):
         mask &= q_pos[:, :, None] - k_pos[:, None, :] < window
     logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1)
-    if os.environ.get("DRYRUN_BASELINE"):
+    if DRYRUN_BASELINE:
         out = jnp.einsum("bhgqs,bshk->bqhgk", probs,
                          v.astype(jnp.float32))
     else:
@@ -258,3 +264,143 @@ def chunk_attention(cfg, p, x, cache_k, cache_v, slot, offsets, *,
                          causal=True, window=window)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, cache_k, cache_v
+
+
+# ---------------------------------------------------------------- paged KV
+# The contiguous cache above scores every query against the full
+# (B, Smax, KV, hd) slab, so decode attention bytes scale with ``Smax``
+# no matter how short a lane's live context is. The paged variant stores
+# K/V in a SHARED page pool (n_pages, page_size, KV, hd); each lane maps
+# logical cache slots to pool pages through a (max_pages,) block table
+# and attention gathers ONLY the lane's first ``read_pages`` pages — the
+# engine buckets ``read_pages`` to the next power of two of the live
+# frontier, so per-token attention reads scale with
+# ``ceil(frontier / page_size)`` instead of ``Smax`` (BLaST's
+# move-only-the-blocks-that-matter thesis applied to the KV cache).
+#
+# Logical slot ``s`` of lane ``b`` lives at pool page
+# ``block_tables[b, s // page_size]``, row ``s % page_size``; the slot
+# numbering (and with it rope, offsets, causal/window masking via
+# ``_cache_positions``) is IDENTICAL to the contiguous cache, so greedy
+# decode through this path is bitwise-identical to the dense one — the
+# gathered slots beyond a lane's frontier land on unallocated (or
+# stale) pages and are killed by the same causal mask that hides the
+# garbage cache tail in the dense path.
+
+
+def gather_pages(pool: jax.Array, block_tables: jax.Array,
+                 read_pages: int) -> jax.Array:
+    """(n_pages, ps, KV, hd) pool + (B, max_pages) tables ->
+    (B, read_pages*ps, KV, hd): each lane's first ``read_pages`` logical
+    pages, in logical-slot order (the XLA fallback of the Pallas
+    blocked-gather kernel — kernels/paged_attention.py)."""
+    b = block_tables.shape[0]
+    g = pool[block_tables[:, :read_pages]]    # (B, R, ps, KV, hd)
+    return g.reshape(b, read_pages * pool.shape[1], *pool.shape[2:])
+
+
+def paged_write(pool: jax.Array, block_tables: jax.Array,
+                slots: jax.Array, values: jax.Array,
+                lane_mask: jax.Array | None = None) -> jax.Array:
+    """Scatter ``values`` at logical ``slots`` through the block tables.
+
+    pool: (n_pages, ps, KV, hd); slots: (B,) or (B, C) int32; values:
+    slots.shape + (KV, hd). Slots past the table end (>= max_pages*ps —
+    the engine parks finished lanes there) and lanes masked out by
+    ``lane_mask`` are DROPPED, never clamped: a clamp would alias the
+    write onto pool page 0, which may belong to another lane."""
+    n_pages, ps = pool.shape[0], pool.shape[1]
+    max_pages = block_tables.shape[1]
+    slots = slots.astype(jnp.int32)
+    squeeze = slots.ndim == 1
+    s2 = slots[:, None] if squeeze else slots            # (B, C)
+    page = s2 // ps
+    ok = page < max_pages
+    if lane_mask is not None:
+        ok &= lane_mask[:, None]
+    phys = jnp.take_along_axis(block_tables,
+                               jnp.minimum(page, max_pages - 1), axis=1)
+    phys = jnp.where(ok, phys, jnp.int32(n_pages))       # OOB -> drop
+    vals = values[:, None] if squeeze else values
+    return pool.at[phys, s2 % ps].set(vals.astype(pool.dtype),
+                                      mode="drop")
+
+
+def paged_decode_attention(cfg, p, x, pool_k, pool_v, block_tables, pos,
+                           *, read_pages: int, window=0, offsets=None,
+                           backend: str = "xla"):
+    """One-token decode over the paged pool. x: (B,1,D); pool_k/v:
+    (n_pages, ps, KV, hd) SHARED across lanes; ``block_tables``
+    (B, max_pages) int32; ``pos`` (B,) is each lane's logical cache
+    slot (parked lanes carry ``max_pages*ps`` — the write drops).
+    ``read_pages`` is STATIC: attention reads each lane's first
+    ``read_pages`` pages (the engine guarantees they cover every live
+    frontier and buckets the value to a power of two so the jit cache
+    stays O(log max_pages)).
+
+    ``backend``: 'xla' (gather + dense core — the oracle), 'pallas'
+    (blocked-gather flash-decode kernel, kernels/paged_attention.py), or
+    'pallas_interp' (same kernel, interpret mode).
+    Returns (out, new_pool_k, new_pool_v)."""
+    b = x.shape[0]
+    ps = pool_k.shape[1]
+    posv = pos.astype(jnp.int32)
+    posb = (posv if offsets is None
+            else posv - offsets.astype(jnp.int32))[:, None]
+    q, k, v = _project_qkv(cfg, p, x)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    pool_k = paged_write(pool_k, block_tables, posv, k[:, 0])
+    pool_v = paged_write(pool_v, block_tables, posv, v[:, 0])
+    smax = read_pages * ps
+    if offsets is None:
+        kpos = jnp.broadcast_to(jnp.arange(smax, dtype=jnp.int32),
+                                (b, smax))
+    else:
+        kpos = _cache_positions(smax, offsets)
+    if backend in ("pallas", "pallas_interp"):
+        from repro.kernels import paged_attention as pk
+        out = pk.paged_decode_attn(
+            cfg, q, pool_k, pool_v, block_tables[:, :read_pages],
+            posb, kpos, window=window,
+            interpret=(backend == "pallas_interp"))
+    else:
+        gk = gather_pages(pool_k, block_tables, read_pages)
+        gv = gather_pages(pool_v, block_tables, read_pages)
+        out = _scores_to_out(cfg, q, gk.astype(q.dtype),
+                             gv.astype(q.dtype), posb, kpos,
+                             causal=True, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, pool_k, pool_v
+
+
+def paged_chunk_attention(cfg, p, x, pool_k, pool_v, block_tables, slot,
+                          offsets, *, read_pages: int, window=0,
+                          lane_mask=None):
+    """Batched chunked-prefill attention over the paged pool: C prompt
+    tokens written at logical slots [slot, slot+C) through each lane's
+    block table (the engine allocates the covering pages before the
+    first chunk). ``lane_mask`` shields running lanes the natural paged
+    way — their writes are dropped, their pages never touched (the
+    dense path had to read-modify-write them back).
+    Returns (out (B,C,D), new_pool_k, new_pool_v)."""
+    b, c, _ = x.shape
+    ps = pool_k.shape[1]
+    slots = jnp.int32(slot) + jnp.arange(c, dtype=jnp.int32)
+    slots_b = jnp.broadcast_to(slots[None, :], (b, c))
+    qpos = slots[None, :] - offsets.astype(jnp.int32)[:, None]   # (B,C)
+    q, k, v = _project_qkv(cfg, p, x)
+    if cfg.rope_theta > 0:
+        rp = jnp.maximum(qpos, 0)
+        q = apply_rope(q, rp, cfg.rope_theta)
+        k = apply_rope(k, rp, cfg.rope_theta)
+    pool_k = paged_write(pool_k, block_tables, slots_b, k, lane_mask)
+    pool_v = paged_write(pool_v, block_tables, slots_b, v, lane_mask)
+    kpos = _cache_positions(read_pages * ps, offsets)
+    gk = gather_pages(pool_k, block_tables, read_pages)
+    gv = gather_pages(pool_v, block_tables, read_pages)
+    out = _scores_to_out(cfg, q, gk.astype(q.dtype), gv.astype(q.dtype),
+                         qpos, kpos, causal=True, window=window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, pool_k, pool_v

@@ -66,6 +66,35 @@ def supports_prefill_chunk(cfg) -> bool:
     return hasattr(module_for(cfg), "prefill_chunk")
 
 
+def supports_paged(cfg) -> bool:
+    """Paged KV pool + block-table attention (transformer families)."""
+    return hasattr(module_for(cfg), "paged_decode_step")
+
+
+def init_paged_cache(cfg, n_pages, page_size, **kw):
+    """Shared paged KV pool (layers, n_pages, page_size, KV, hd); see
+    transformer.init_paged_cache."""
+    return module_for(cfg).init_paged_cache(cfg, n_pages, page_size, **kw)
+
+
+def paged_decode_step(cfg, params, cache, tokens, pos, block_tables, *,
+                      read_pages, **kw):
+    """One decode step over the paged pool: ``pos`` (B,) logical slots,
+    ``block_tables`` (B, max_pages), ``read_pages`` static — attention
+    reads only each lane's first ``read_pages`` pages."""
+    return module_for(cfg).paged_decode_step(
+        cfg, params, cache, tokens, pos, block_tables,
+        read_pages=read_pages, **kw)
+
+
+def paged_prefill_chunk(cfg, params, cache, tokens, slot, offsets,
+                        block_tables, *, read_pages, **kw):
+    """Chunked prefill through the block tables (paged pool)."""
+    return module_for(cfg).paged_prefill_chunk(
+        cfg, params, cache, tokens, slot, offsets, block_tables,
+        read_pages=read_pages, **kw)
+
+
 def prefill_chunk(cfg, params, cache, tokens, slot, offsets, **kw):
     """Batched chunked prefill (KV-cache families). Writes the chunk's
     K/V at cache slots [slot, slot+C); see transformer.prefill_chunk."""

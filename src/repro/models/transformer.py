@@ -274,6 +274,66 @@ def abstract_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
             "v": jax.ShapeDtypeStruct(shape, dtype)}
 
 
+def init_paged_cache(cfg, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """Paged KV pool: (layers, n_pages, page_size, KV, hd), SHARED by
+    every lane — lanes map logical slots to pool pages through per-lane
+    block tables (engine.py), and total servable context is bounded by
+    ``n_pages * page_size`` instead of ``max_batch * max_len``. A pool
+    page is allocated for a lane across ALL layers at once, so the block
+    table is layer-independent."""
+    ns, per = n_stacks(cfg)
+    _, kv = attn.eff_heads(cfg)
+    shape = (ns * per, n_pages, page_size, kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _run_stack(cfg, params, cache, x, masks, dist, attn_fn):
+    """Scan the layer stack with a pluggable attention core — the single
+    implementation behind contiguous/paged decode and chunked prefill
+    (they differ ONLY in how attention reads/writes the cache).
+
+    ``attn_fn(p_attn, h, ck, cv, window) -> (attn_out, new_k, new_v)``
+    where ck/cv are this layer's cache slices.
+    Returns (hidden, new_cache)."""
+    def one(window, p_l, m_l, x, aux, ck, cv):
+        h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
+                 p_l.get("ln_attn_bias"))
+        a, nk, nv = attn_fn(p_l["attn"], h, ck, cv, window)
+        x = x + a
+        h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
+                 p_l.get("ln_mlp_bias"))
+        m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
+        return x + m, aux + al, nk, nv
+
+    def body(carry, xs):
+        x, aux = carry
+        if cfg.layer_pattern == "local_global":
+            p_loc, m_loc, p_glb, m_glb, ck, cv = xs
+            x, aux, nk0, nv0 = one(cfg.sliding_window, p_loc, m_loc,
+                                   x, aux, ck[0], cv[0])
+            x, aux, nk1, nv1 = one(0, p_glb, m_glb, x, aux, ck[1], cv[1])
+            return (x, aux), (jnp.stack([nk0, nk1]),
+                              jnp.stack([nv0, nv1]))
+        p_l, m_l, ck, cv = xs
+        x, aux, nk, nv = one(cfg.sliding_window, p_l, m_l, x, aux, ck, cv)
+        return (x, aux), (nk, nv)
+
+    ns, per = n_stacks(cfg)
+    if cfg.layer_pattern == "local_global":
+        ck = cache["k"].reshape(ns, per, *cache["k"].shape[1:])
+        cv = cache["v"].reshape(ns, per, *cache["v"].shape[1:])
+        xs = (params["layers_local"], _layer_masks(masks, "layers_local"),
+              params["layers_global"], _layer_masks(masks, "layers_global"),
+              ck, cv)
+    else:
+        xs = (params["layers"], _layer_masks(masks, "layers"),
+              cache["k"], cache["v"])
+    (x, _), (nk, nv) = jax.lax.scan(body, (x, 0.0), xs)
+    return x, {"k": nk.reshape(cache["k"].shape),
+               "v": nv.reshape(cache["v"].shape)}
+
+
 def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None,
                 offsets=None):
     """One decode step. tokens: (B,1); pos: CACHE SLOT — scalar int32
@@ -287,53 +347,33 @@ def decode_step(cfg, params, cache, tokens, pos, *, masks=None, dist=None,
     Returns (logits (B,1,V), new_cache)."""
     x = embed_inputs(cfg, params, tokens)
 
-    def body(carry, xs):
-        x, aux = carry
-        if cfg.layer_pattern == "local_global":
-            p_loc, m_loc, p_glb, m_glb, ck, cv = xs
-            out = []
-            for i, (p_l, m_l, win) in enumerate(
-                    ((p_loc, m_loc, cfg.sliding_window), (p_glb, m_glb, 0))):
-                h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
-                         p_l.get("ln_attn_bias"))
-                a, nk, nv = attn.decode_attention(
-                    cfg, p_l["attn"], h, ck[i], cv[i], pos, window=win,
-                    offsets=offsets)
-                x = x + a
-                h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
-                         p_l.get("ln_mlp_bias"))
-                m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
-                x = x + m
-                aux = aux + al
-                out.append((nk, nv))
-            nk = jnp.stack([out[0][0], out[1][0]])
-            nv = jnp.stack([out[0][1], out[1][1]])
-            return (x, aux), (nk, nv)
-        p_l, m_l, ck, cv = xs
-        h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
-                 p_l.get("ln_attn_bias"))
-        a, nk, nv = attn.decode_attention(
-            cfg, p_l["attn"], h, ck, cv, pos,
-            window=cfg.sliding_window, offsets=offsets)
-        x = x + a
-        h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
-                 p_l.get("ln_mlp_bias"))
-        m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
-        return (x + m, aux + al), (nk, nv)
+    def attn_fn(p_a, h, ck, cv, window):
+        return attn.decode_attention(cfg, p_a, h, ck, cv, pos,
+                                     window=window, offsets=offsets)
 
-    ns, per = n_stacks(cfg)
-    if cfg.layer_pattern == "local_global":
-        ck = cache["k"].reshape(ns, per, *cache["k"].shape[1:])
-        cv = cache["v"].reshape(ns, per, *cache["v"].shape[1:])
-        xs = (params["layers_local"], _layer_masks(masks, "layers_local"),
-              params["layers_global"], _layer_masks(masks, "layers_global"),
-              ck, cv)
-    else:
-        xs = (params["layers"], _layer_masks(masks, "layers"),
-              cache["k"], cache["v"])
-    (x, _), (nk, nv) = jax.lax.scan(body, (x, 0.0), xs)
-    new_cache = {"k": nk.reshape(cache["k"].shape),
-                 "v": nv.reshape(cache["v"].shape)}
+    x, new_cache = _run_stack(cfg, params, cache, x, masks, dist, attn_fn)
+    return logits_from_hidden(cfg, params, x), new_cache
+
+
+def paged_decode_step(cfg, params, cache, tokens, pos, block_tables, *,
+                      read_pages: int, masks=None, dist=None,
+                      offsets=None, attn_backend: str = "xla"):
+    """One decode step over the PAGED pool cache (init_paged_cache).
+    tokens: (B,1); pos: (B,) logical cache slots (parked lanes carry
+    ``max_pages * page_size`` — the write drops); block_tables:
+    (B, max_pages) int32; ``read_pages`` STATIC — attention reads only
+    each lane's first ``read_pages`` pages, so per-token attention bytes
+    scale with the live frontier, not the cache extent.
+    Returns (logits (B,1,V), new_cache)."""
+    x = embed_inputs(cfg, params, tokens)
+
+    def attn_fn(p_a, h, ck, cv, window):
+        return attn.paged_decode_attention(
+            cfg, p_a, h, ck, cv, block_tables, pos,
+            read_pages=read_pages, window=window, offsets=offsets,
+            backend=attn_backend)
+
+    x, new_cache = _run_stack(cfg, params, cache, x, masks, dist, attn_fn)
     return logits_from_hidden(cfg, params, x), new_cache
 
 
@@ -351,42 +391,28 @@ def prefill_chunk(cfg, params, cache, tokens, slot, offsets, *,
     their frontier). Returns (logits (B,C,V) f32, new_cache)."""
     x = embed_inputs(cfg, params, tokens)
 
-    def one(cfg_window, p_l, m_l, x, ck, cv):
-        h = norm(cfg.norm_kind, x, p_l["ln_attn_scale"],
-                 p_l.get("ln_attn_bias"))
-        a, nk, nv = attn.chunk_attention(
-            cfg, p_l["attn"], h, ck, cv, slot, offsets,
-            window=cfg_window, lane_mask=lane_mask)
-        x = x + a
-        h = norm(cfg.norm_kind, x, p_l["ln_mlp_scale"],
-                 p_l.get("ln_mlp_bias"))
-        m, al = mlp_forward(cfg, p_l["mlp"], h, m_l, dist)
-        return x + m, al, nk, nv
+    def attn_fn(p_a, h, ck, cv, window):
+        return attn.chunk_attention(cfg, p_a, h, ck, cv, slot, offsets,
+                                    window=window, lane_mask=lane_mask)
 
-    def body(carry, xs):
-        x, aux = carry
-        if cfg.layer_pattern == "local_global":
-            p_loc, m_loc, p_glb, m_glb, ck, cv = xs
-            x, a1, nk0, nv0 = one(cfg.sliding_window, p_loc, m_loc,
-                                  x, ck[0], cv[0])
-            x, a2, nk1, nv1 = one(0, p_glb, m_glb, x, ck[1], cv[1])
-            return (x, aux + a1 + a2), (jnp.stack([nk0, nk1]),
-                                        jnp.stack([nv0, nv1]))
-        p_l, m_l, ck, cv = xs
-        x, al, nk, nv = one(cfg.sliding_window, p_l, m_l, x, ck, cv)
-        return (x, aux + al), (nk, nv)
+    x, new_cache = _run_stack(cfg, params, cache, x, masks, dist, attn_fn)
+    return logits_from_hidden(cfg, params, x), new_cache
 
-    ns, per = n_stacks(cfg)
-    if cfg.layer_pattern == "local_global":
-        ck = cache["k"].reshape(ns, per, *cache["k"].shape[1:])
-        cv = cache["v"].reshape(ns, per, *cache["v"].shape[1:])
-        xs = (params["layers_local"], _layer_masks(masks, "layers_local"),
-              params["layers_global"], _layer_masks(masks, "layers_global"),
-              ck, cv)
-    else:
-        xs = (params["layers"], _layer_masks(masks, "layers"),
-              cache["k"], cache["v"])
-    (x, _), (nk, nv) = jax.lax.scan(body, (x, 0.0), xs)
-    new_cache = {"k": nk.reshape(cache["k"].shape),
-                 "v": nv.reshape(cache["v"].shape)}
+
+def paged_prefill_chunk(cfg, params, cache, tokens, slot, offsets,
+                        block_tables, *, read_pages: int, masks=None,
+                        dist=None, lane_mask=None):
+    """Chunked prefill over the PAGED pool: the chunk's K/V lands at
+    logical slots [slot, slot+C) through each lane's block table (pages
+    pre-allocated by the engine); attention reads each lane's first
+    ``read_pages`` pages (STATIC — must cover slot+C).
+    Returns (logits (B,C,V) f32, new_cache)."""
+    x = embed_inputs(cfg, params, tokens)
+
+    def attn_fn(p_a, h, ck, cv, window):
+        return attn.paged_chunk_attention(
+            cfg, p_a, h, ck, cv, block_tables, slot, offsets,
+            read_pages=read_pages, window=window, lane_mask=lane_mask)
+
+    x, new_cache = _run_stack(cfg, params, cache, x, masks, dist, attn_fn)
     return logits_from_hidden(cfg, params, x), new_cache

@@ -129,9 +129,8 @@ def mamba_mixer(cfg, p, x, *, ssm_state=None, conv_state=None,
     # Grouped SSD (n_groups=1): B/C shared across heads, per-head scalar
     # decay — never materialises (B,S,H,d_state) broadcasts
     # (EXPERIMENTS.md §Perf, zamba2 iteration)
-    import os
     v = xs * dt_s[..., None].astype(xs.dtype)
-    if os.environ.get("DRYRUN_BASELINE"):   # pre-optimization variant
+    if attn_mod.DRYRUN_BASELINE:            # pre-optimization variant
         log_w = jnp.broadcast_to((dt_s * a)[..., None],
                                  (b, s, nheads, state))
         q = jnp.broadcast_to(cmat[:, :, None], (b, s, nheads, state))

@@ -5,9 +5,22 @@ a Python loop and only handles one batch of equal-length prompts.  This
 engine turns the same pruned/packed weights into a subsystem that keeps
 the accelerator saturated across ragged, continuously-arriving requests:
 
-  * **lanes** — ``max_batch`` batch rows over one shared KV cache
-    ``(layers, max_batch, max_len, kv, hd)``; a completed sequence frees
-    its lane for the next queued request (slot reuse);
+  * **paged KV cache** (default) — K/V lives in a SHARED page pool
+    ``(layers, n_pages, page_size, kv, hd)`` with a host-side free-list
+    allocator (serving/pages.py); each lane maps logical cache slots to
+    pool pages through a ``(max_pages,)`` block table carried on-device
+    through the decode slab. Attention gathers ONLY a lane's first
+    ``read_pages`` pages — bucketed to the next power of two of the live
+    frontier so the jit cache stays O(log max_pages) — so per-token
+    attention bytes scale with ``ceil(frontier / page_size)`` instead of
+    ``max_len``. Total servable context is bounded by POOL PAGES, not
+    ``max_batch × max_len``: ``max_len`` can be set far beyond what a
+    contiguous ``(B, max_len)`` slab could ever hold, and one lane may
+    take nearly the whole pool. Greedy decode through the paged path is
+    bitwise-identical to the contiguous one (``paged=False``) — the slot
+    numbering, rope, and masking are shared; only the storage moves;
+  * **lanes** — ``max_batch`` batch rows; a completed sequence frees its
+    lane (and pages) for the next queued request (slot reuse);
   * **per-lane frontiers** — every lane carries its OWN cache-slot write
     position (a ``(max_batch,)`` vector, not a shared scalar), so a
     freed lane resets its frontier to 0 and admits a new prompt
@@ -15,27 +28,29 @@ the accelerator saturated across ragged, continuously-arriving requests:
   * **decode slabs** — the token loop runs ON-DEVICE: one jitted
     ``lax.scan`` over ``slab_k`` greedy steps (serving/step.py) carries
     per-lane pending token / frontier / remaining budget / live flags
-    and emits a ``(max_batch, slab_k)`` token block, so the host syncs
-    once per slab instead of once per token; lanes that hit eos, their
-    budget, or the cache end mid-slab are masked out on-device and
-    their trailing tokens discarded on the host — greedy decode stays
-    bitwise-identical to the per-token path and the oracle;
+    (+ block tables) and emits a ``(max_batch, slab_k)`` token block, so
+    the host syncs once per slab instead of once per token; lanes that
+    hit eos, their budget, or the cache end mid-slab are masked out
+    on-device and their trailing tokens discarded on the host — greedy
+    decode stays bitwise-identical to the per-token path and the oracle;
   * **persistent device state** — pending/frontier/offsets/remaining/
-    live live on the accelerator between slabs; the host re-uploads
-    them only at admission/eviction events (never per token);
+    live (and block tables) live on the accelerator between slabs; the
+    host re-uploads them only at admission/eviction events;
   * **right-aligned ragged prompts** — prompts admitted together are
     prefilled as one group in slots ``[0, W)`` (``W`` = longest prompt
     in the group); the left-pad ``offset = W - plen`` feeds rope/masking
     the true logical positions (models/attention.py
     ``_cache_positions``);
   * **chunked batched prefill** — prompts enter through
-    ``registry.prefill_chunk`` in whole ``(B, C)`` chunks per jitted
-    call instead of one token per Python iteration; running lanes are
-    shielded from the writes by ``lane_mask`` (stale K/V needs no
-    zeroing — causal masking hides slots beyond a lane's frontier and
-    offset masking hides slots before its prompt);
-  * **admission** — ``scheduler.FIFOScheduler``: with per-lane
-    frontiers any free lane takes the head request immediately.
+    ``registry.prefill_chunk`` / ``paged_prefill_chunk`` in whole
+    ``(B, C)`` chunks per jitted call; running lanes are shielded from
+    the writes by ``lane_mask``;
+  * **admission** — ``scheduler.FIFOScheduler``: any free lane takes the
+    head request; paged engines additionally gate the admission group on
+    FREE PAGES (a group that would overdraw the pool waits — strict
+    FIFO, head-of-line blocking by design). Pages for a request's whole
+    extent (group width + decode budget, capped at ``max_len``) are
+    pinned at admission, so a slab can never run out of pages mid-slab.
 
 Greedy decode only (the paper's serving benchmark); temperature sampling
 stays on the ``serve_loop`` oracle path.
@@ -50,8 +65,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.serving.pages import PagePool
 from repro.serving.scheduler import FIFOScheduler, Request
 from repro.serving.step import (make_decode_slab_step,
+                                make_paged_decode_slab_step,
+                                make_paged_prefill_chunk_step,
                                 make_prefill_chunk_step)
 
 
@@ -61,7 +79,7 @@ class GenResult:
     uid: int
     prompt: np.ndarray
     generated: np.ndarray
-    truncated: bool = False    # hit max_len before max_new_tokens
+    truncated: bool = False    # hit the lane's slot cap before budget
 
     @property
     def tokens(self) -> np.ndarray:
@@ -73,6 +91,13 @@ class _Lane:
     req: Request
     offset: int                # left-pad: group width - plen
     generated: list[int]
+    pages: list[int] = dataclasses.field(default_factory=list)
+
+
+def _pow2_bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clipped to [1, cap] — the paged
+    attention read width (bounds the jit cache to O(log cap) entries)."""
+    return max(1, min(cap, 1 << max(0, (n - 1).bit_length())))
 
 
 class Engine:
@@ -84,16 +109,32 @@ class Engine:
 
     ``slab_k`` is the number of decode steps per jitted slab (host syncs
     once per slab); ``slab_k=1`` is the per-token baseline.
+
+    ``paged=True`` (default) stores K/V in the shared page pool:
+    ``page_size`` slots per page, ``n_pages`` pool pages (default sized
+    to the contiguous cache's ``max_batch × max_len`` so the two modes
+    are memory-comparable; shrink it to serve with less, or grow
+    ``max_len`` far past contiguous reach). ``paged=False`` keeps the
+    dense ``(B, max_len)`` slab — the parity baseline.
+    ``attn_backend`` picks the paged decode attention implementation:
+    'xla' (gather, the oracle), 'pallas' (blocked-gather TPU kernel), or
+    'pallas_interp' (kernel in interpret mode, CPU tests).
     """
 
     def __init__(self, cfg, params, *, max_batch: int, max_len: int,
                  prefill_chunk: int = 16, slab_k: int = 8,
                  eos_id: int | None = None, dist=None,
-                 scheduler: FIFOScheduler | None = None):
+                 scheduler: FIFOScheduler | None = None,
+                 paged: bool = True, page_size: int = 16,
+                 n_pages: int | None = None, attn_backend: str = "xla"):
         if not registry.supports_prefill_chunk(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} is not KV-cache servable by the "
                 "engine; use serve_loop.generate")
+        if paged and not registry.supports_paged(cfg):
+            raise NotImplementedError(
+                f"family {cfg.family!r} has no paged KV cache; pass "
+                "paged=False")
         assert slab_k >= 1
         self.cfg = cfg
         self.params = params
@@ -102,11 +143,8 @@ class Engine:
         self.chunk = max(1, min(prefill_chunk, max_len))
         self.slab_k = slab_k
         self.eos_id = eos_id
+        self.paged = paged
         self.scheduler = scheduler or FIFOScheduler(max_batch, max_len)
-        self.cache = registry.init_cache(cfg, max_batch, max_len)
-        self._prefill = jax.jit(make_prefill_chunk_step(cfg, dist=dist))
-        self._slab = jax.jit(make_decode_slab_step(
-            cfg, slab_k, max_len, eos_id=eos_id, dist=dist))
         self.lanes: list[_Lane | None] = [None] * max_batch
         # host mirror of the on-device per-lane state; uploaded to the
         # device ONLY when admission/eviction edits it (self._dirty)
@@ -117,6 +155,31 @@ class Engine:
             "remaining": np.zeros(max_batch, np.int32),
             "live": np.zeros(max_batch, bool),
         }
+        if paged:
+            self.page_size = page_size
+            per_lane = -(-max_len // page_size)
+            self.n_pages = (max_batch * per_lane if n_pages is None
+                            else n_pages)
+            self.max_pages = min(per_lane, self.n_pages)
+            self.pool = PagePool(self.n_pages, page_size)
+            self.cache = registry.init_paged_cache(cfg, self.n_pages,
+                                                   page_size)
+            self._mirror["bt"] = np.zeros((max_batch, self.max_pages),
+                                          np.int32)
+            self._prefill = jax.jit(
+                make_paged_prefill_chunk_step(cfg, dist=dist),
+                static_argnames=("read_pages",))
+            self._slab = jax.jit(
+                make_paged_decode_slab_step(
+                    cfg, slab_k, max_len, page_size, eos_id=eos_id,
+                    dist=dist, attn_backend=attn_backend),
+                static_argnames=("read_pages",))
+        else:
+            self.cache = registry.init_cache(cfg, max_batch, max_len)
+            self._prefill = jax.jit(make_prefill_chunk_step(cfg,
+                                                            dist=dist))
+            self._slab = jax.jit(make_decode_slab_step(
+                cfg, slab_k, max_len, eos_id=eos_id, dist=dist))
         self._dstate = None
         self._dirty = True
         self._uid = 0
@@ -127,15 +190,57 @@ class Engine:
                       "decode_slabs": 0, "decode_steps": 0,
                       "decode_tokens": 0, "generated_tokens": 0,
                       "prefill_s": 0.0, "decode_s": 0.0, "admitted": 0,
-                      "evicted": 0, "truncated": 0}
+                      "evicted": 0, "truncated": 0,
+                      # paged attention read accounting (page units):
+                      # what the block-table gather touched vs what a
+                      # dense max_len read would have
+                      "pages_read": 0, "pages_read_dense_equiv": 0,
+                      "peak_kv_pages": 0}
+
+    # ------------------------------------------------------------- memory
+    @property
+    def page_bytes(self) -> int:
+        """Bytes of ONE pool page across all layers, K+V."""
+        k = self.cache["k"]
+        layers, kv, hd = k.shape[0], k.shape[-2], k.shape[-1]
+        return 2 * layers * self.page_size * kv * hd * k.dtype.itemsize
+
+    @property
+    def kv_bytes_peak(self) -> int:
+        """Peak bytes of live KV data: pages actually pinned (paged) or
+        the whole dense slab (contiguous)."""
+        if self.paged:
+            return self.pool.peak_in_use * self.page_bytes
+        return self.cache["k"].nbytes + self.cache["v"].nbytes
+
+    @property
+    def kv_bytes_contiguous_equiv(self) -> int:
+        """What a dense (B, max_len) cache of this config would hold."""
+        k = self.cache["k"]
+        layers, kv, hd = k.shape[0], k.shape[-2], k.shape[-1]
+        return (2 * layers * self.max_batch * self.max_len * kv * hd
+                * k.dtype.itemsize)
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, max_new_tokens: int = 32,
                uid: int | None = None) -> int:
         uid = self._uid if uid is None else uid
         self._uid = max(self._uid, uid) + 1
-        self.scheduler.submit(Request(uid, np.asarray(prompt),
-                                      max_new_tokens))
+        req = Request(uid, np.asarray(prompt), max_new_tokens)
+        if self.paged and req.prompt_len < self.max_len:
+            # (prompts with no decode headroom at max_len fall through
+            # to the scheduler's own slot-units rejection below)
+            need = self._page_cost([req])
+            if need > self.n_pages:
+                raise ValueError(
+                    f"oversized request: prompt of {req.prompt_len} "
+                    f"tokens + budget of {max_new_tokens} new tokens "
+                    f"needs {need} pages ({self.page_size} slots each) "
+                    f"even admitted alone, but the pool holds only "
+                    f"{self.n_pages} pages "
+                    f"({self.n_pages * self.page_size} cache slots) — "
+                    "shrink the request or grow n_pages")
+        self.scheduler.submit(req)
         return uid
 
     # ------------------------------------------------------- lane helpers
@@ -148,6 +253,11 @@ class Engine:
         """(max_batch,) per-lane cache-slot write positions."""
         return self._mirror["frontier"].copy()
 
+    @property
+    def block_tables(self) -> np.ndarray:
+        """(max_batch, max_pages) logical page -> pool page (paged)."""
+        return self._mirror["bt"].copy()
+
     def _sync_dstate(self):
         """Upload the host mirror as the device-side slab state — called
         lazily, only after admission/eviction edits."""
@@ -156,10 +266,26 @@ class Engine:
                             for k, v in self._mirror.items()}
             self._dirty = False
 
+    def _page_cost(self, group: list[Request]) -> int:
+        """Pages a tentative admission group pins: the group prefills
+        right-aligned to the LONGEST member, so every lane's extent is
+        ``min(group_width + budget - 1, max_len)`` slots (prefill writes
+        the pad slots too; decode writes at most budget-1 more past the
+        width)."""
+        w = max(r.prompt_len for r in group)
+        # max(.., w): prefill writes the full width even if the budget
+        # were ever allowed below 1 — never pin fewer slots than it
+        return sum(self.pool.slots_for(
+            min(max(w + r.max_new_tokens - 1, w), self.max_len))
+            for r in group)
+
     def _finish(self, i: int, truncated: bool = False) -> GenResult:
         lane = self.lanes[i]
         self.lanes[i] = None
         self._mirror["live"][i] = False
+        if self.paged and lane.pages:
+            self.pool.release(lane.pages)
+            self._mirror["bt"][i] = 0
         self._dirty = True
         self.stats["evicted"] += 1
         self.stats["truncated"] += int(truncated)
@@ -169,7 +295,11 @@ class Engine:
     # ----------------------------------------------------------- admission
     def _admit(self) -> None:
         free = [i for i, l in enumerate(self.lanes) if l is None]
-        reqs = self.scheduler.admit(len(free))
+        if self.paged:
+            reqs = self.scheduler.admit(len(free), self.pool.free_pages,
+                                        self._page_cost)
+        else:
+            reqs = self.scheduler.admit(len(free))
         if not reqs:
             return
         # the admitted group prefills right-aligned in slots [0, W):
@@ -181,6 +311,13 @@ class Engine:
             i = free.pop(0)
             off = width - r.prompt_len
             self.lanes[i] = _Lane(r, off, [])
+            if self.paged:
+                need = self.pool.slots_for(
+                    min(max(width + r.max_new_tokens - 1, width),
+                        self.max_len))
+                self.lanes[i].pages = self.pool.alloc(need)
+                m["bt"][i] = 0
+                m["bt"][i, :need] = self.lanes[i].pages
             m["offsets"][i] = off
             m["frontier"][i] = width
             m["remaining"][i] = r.max_new_tokens - 1
@@ -202,15 +339,29 @@ class Engine:
         offsets = jnp.asarray(m["offsets"])
         mask_j = jnp.asarray(lane_mask)
         toks_j = jnp.asarray(tokens)
+        if self.paged:
+            bt_j = jnp.asarray(m["bt"])
+            r_pf = _pow2_bucket(self.pool.slots_for(width),
+                                self.max_pages)
         last = None
         pos = 0
         rem = width % self.chunk
         sizes = ([rem] if rem else []) + [self.chunk] * (width // self.chunk)
         t0 = time.time()
         for c in sizes:
-            last, self.cache = self._prefill(
-                self.params, self.cache, toks_j[:, pos:pos + c],
-                jnp.int32(pos), offsets, mask_j)
+            if self.paged:
+                last, self.cache = self._prefill(
+                    self.params, self.cache, toks_j[:, pos:pos + c],
+                    jnp.int32(pos), offsets, mask_j, bt_j,
+                    read_pages=r_pf)
+                self.stats["pages_read"] += r_pf * len(new_lanes) * c
+                self.stats["pages_read_dense_equiv"] += (
+                    self.pool.slots_for(self.max_len)
+                    * len(new_lanes) * c)
+            else:
+                last, self.cache = self._prefill(
+                    self.params, self.cache, toks_j[:, pos:pos + c],
+                    jnp.int32(pos), offsets, mask_j)
             pos += c
             self.stats["prefill_chunks"] += 1
         first = np.asarray(jax.block_until_ready(jnp.argmax(last, -1)))
@@ -249,8 +400,20 @@ class Engine:
             return finished
         self._sync_dstate()
         t0 = time.time()
-        block, self._dstate, self.cache = self._slab(
-            self.params, self.cache, self._dstate)
+        if self.paged:
+            fmax = int(max(self._mirror["frontier"][i]
+                           for i in self.active_lanes))
+            need = min(fmax + self.slab_k, self.max_len)
+            r = _pow2_bucket(self.pool.slots_for(need), self.max_pages)
+            block, self._dstate, self.cache = self._slab(
+                self.params, self.cache, self._dstate, read_pages=r)
+            n = len(self.active_lanes) * self.slab_k
+            self.stats["pages_read"] += r * n
+            self.stats["pages_read_dense_equiv"] += (
+                self.pool.slots_for(self.max_len) * n)
+        else:
+            block, self._dstate, self.cache = self._slab(
+                self.params, self.cache, self._dstate)
         block = np.asarray(jax.block_until_ready(block))
         self.stats["decode_s"] += time.time() - t0
         self.stats["decode_slabs"] += 1
@@ -289,28 +452,37 @@ class Engine:
         self.stats["e2e_tok_per_s"] = (
             self.stats["generated_tokens"] / total_s
             if total_s > 0 else 0.0)
+        if self.paged:
+            self.stats["peak_kv_pages"] = self.pool.peak_in_use
+        self.stats["peak_kv_bytes"] = self.kv_bytes_peak
+        self.stats["kv_bytes_contiguous_equiv"] = \
+            self.kv_bytes_contiguous_equiv
         return out
 
 
 def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
              max_len: int | None = None, eos_id: int | None = None,
              prefill_chunk: int = 16, slab_k: int = 8,
-             max_batch: int | None = None, dist=None):
+             max_batch: int | None = None, dist=None, paged: bool = True,
+             page_size: int = 16, n_pages: int | None = None,
+             attn_backend: str = "xla"):
     """Batch-convenience wrapper: list of ragged 1-D prompts (or a 2-D
     equal-length array) -> (list of per-request token arrays, stats).
 
     Greedy; equal-length batches are bitwise-identical to
-    ``serve_loop.generate`` for every slab size
-    (tests/test_serving_engine.py). A request that runs out of cache
-    headroom returns fewer than ``max_new_tokens`` tokens —
-    ``stats["truncated"]`` counts them (use ``Engine`` directly for
-    per-request ``GenResult.truncated``)."""
+    ``serve_loop.generate`` for every slab size and for both cache
+    layouts (tests/test_serving_engine.py, tests/test_paged_kv.py). A
+    request that runs out of cache headroom returns fewer than
+    ``max_new_tokens`` tokens — ``stats["truncated"]`` counts them (use
+    ``Engine`` directly for per-request ``GenResult.truncated``)."""
     prompts = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
     maxp = max(p.size for p in prompts)
     max_len = max_len or (maxp + max_new_tokens)
     eng = Engine(cfg, params, max_batch=max_batch or len(prompts),
                  max_len=max_len, prefill_chunk=prefill_chunk,
-                 slab_k=slab_k, eos_id=eos_id, dist=dist)
+                 slab_k=slab_k, eos_id=eos_id, dist=dist, paged=paged,
+                 page_size=page_size, n_pages=n_pages,
+                 attn_backend=attn_backend)
     uids = [eng.submit(p, max_new_tokens) for p in prompts]
     res = eng.run()
     return [res[u].tokens for u in uids], eng.stats

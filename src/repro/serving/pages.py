@@ -1,0 +1,58 @@
+"""Free-list page allocator for the shared paged KV pool.
+
+The engine's pool holds ``n_pages`` pages of ``page_size`` cache slots
+each, shared by every lane across all layers (one pool page = that page
+index in EVERY layer of the (layers, n_pages, page_size, KV, hd) pool
+arrays — block tables stay layer-independent). This class is the pure
+host-side bookkeeping: which pages are free, which lane owns which, and
+the peak-in-use watermark the serving benchmark reports as the paged
+cache's true memory footprint.
+
+Pages are handed out low-index-first so a fresh engine's early block
+tables are dense and the gather stays cache-friendly; `release` returns
+pages for immediate reuse (stale K/V in a reused page needs no zeroing —
+the causal/offset masking that hides the dense cache's garbage tail
+hides it identically through the block table, models/attention.py).
+"""
+from __future__ import annotations
+
+
+class PagePool:
+    """Host-side free list over ``n_pages`` pool pages."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages >= 1 and page_size >= 1
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # stack, highest index on top -> alloc pops lowest-numbered first
+        self._free = list(range(n_pages - 1, -1, -1))
+        self.peak_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Pop ``n`` free pages; raises RuntimeError when the pool can't
+        supply them (the engine's admission gate makes that a bug, not a
+        runtime condition)."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"page pool exhausted: requested {n} pages, "
+                f"{len(self._free)} free of {self.n_pages}")
+        pages = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def release(self, pages: list[int]) -> None:
+        for p in pages:
+            assert 0 <= p < self.n_pages
+        self._free.extend(reversed(pages))
+
+    def slots_for(self, n_slots: int) -> int:
+        """Pages covering ``n_slots`` logical cache slots."""
+        return -(-n_slots // self.page_size)

@@ -35,6 +35,12 @@ class Request:
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            # prefill always emits one token; a zero budget would also
+            # under-pin pages in the paged engine (page cost is
+            # width + budget - 1 slots, but prefill writes width slots)
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {self.max_new_tokens}")
 
     @property
     def prompt_len(self) -> int:
@@ -60,12 +66,26 @@ class FIFOScheduler:
                 f"{self.max_len} with room to generate")
         self._queue.append(req)
 
-    def admit(self, n_free: int) -> list[Request]:
+    def admit(self, n_free: int, free_pages: int | None = None,
+              page_cost=None) -> list[Request]:
         """Pop the FIFO prefix that may start now: with per-lane
         frontiers every free lane starts at slot 0, so any queued
-        request joins as soon as a lane is free."""
+        request joins as soon as a lane is free.
+
+        Paged engines gate admission on FREE PAGES too: ``page_cost``
+        maps a tentative admission group -> total pages it would pin
+        (the group is prefilled right-aligned, so adding a long prompt
+        widens every member's pad region — the cost must be recomputed
+        for the whole group, not summed per request). The prefix stops
+        at the first request whose inclusion would overdraw
+        ``free_pages`` — strict FIFO, head-of-line blocking by design
+        (the head is admitted as soon as enough pages free up)."""
         out: list[Request] = []
         while self._queue and len(out) < n_free:
+            if page_cost is not None:
+                trial = out + [self._queue[0]]
+                if page_cost(trial) > free_pages:
+                    break
             out.append(self._queue.popleft())
         return out
 

@@ -44,6 +44,42 @@ def make_prefill_chunk_step(cfg, dist=None):
     return prefill_step
 
 
+def _run_slab(k_steps, max_len, eos_id, cache, state, park, step_fn):
+    """The decode-slab scan body shared by the contiguous and paged
+    twins — they differ ONLY in where a dead lane parks (``park``: a
+    slot the cache write drops) and how one step touches the cache
+    (``step_fn(cache, tokens (B,1), write_pos (B,)) -> (logits,
+    new_cache)``), so the stop logic can never drift between them (the
+    paged-vs-contiguous bitwise-parity guarantee leans on that).
+
+    A lane dies mid-slab when it emits ``eos_id``, exhausts its budget,
+    or runs out of cache (``frontier`` reaching ``max_len``); a dead
+    lane's frontier/remaining freeze and its emitted tokens after the
+    stop point are garbage the host discards — so greedy decode stays
+    bitwise-identical to the per-token path."""
+    def body(carry, _):
+        cache, pending, frontier, remaining, live = carry
+        write_pos = jnp.where(live, frontier, park)
+        logits, cache = step_fn(cache, pending[:, None], write_pos)
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        frontier = jnp.where(live, frontier + 1, frontier)
+        remaining = jnp.where(live, remaining - 1, remaining)
+        died = (remaining <= 0) | (frontier >= max_len)
+        if eos_id is not None:
+            died |= nxt == eos_id
+        live = live & ~died
+        pending = jnp.where(live, nxt, pending)
+        return (cache, pending, frontier, remaining, live), nxt
+
+    carry = (cache, state["pending"], state["frontier"],
+             state["remaining"], state["live"])
+    (cache, pending, frontier, remaining, live), toks = jax.lax.scan(
+        body, carry, None, length=k_steps)
+    state = dict(state, pending=pending, frontier=frontier,
+                 remaining=remaining, live=live)
+    return toks.T, state, cache
+
+
 def make_decode_slab_step(cfg, k_steps: int, max_len: int,
                           eos_id: int | None = None, dist=None):
     """Jitted decode SLAB: one ``lax.scan`` over ``k_steps`` greedy
@@ -59,12 +95,8 @@ def make_decode_slab_step(cfg, k_steps: int, max_len: int,
       ``remaining`` int32  decode tokens the lane may still emit
       ``live``      bool   lane still decoding
 
-    A lane dies mid-slab when it emits ``eos_id``, exhausts its budget,
-    or runs out of cache (``frontier`` reaching ``max_len``); a dead
-    lane is parked at write slot ``max_len`` (the scatter drops it), its
-    frontier/remaining freeze, and its emitted tokens after the stop
-    point are garbage the host discards — so greedy decode stays
-    bitwise-identical to the per-token path.
+    Dead lanes park at write slot ``max_len`` (the scatter drops it) —
+    see ``_run_slab`` for the shared stop logic.
 
     slab(params, cache, state) -> (tokens (B, k_steps) int32,
                                    new_state, new_cache)
@@ -72,29 +104,64 @@ def make_decode_slab_step(cfg, k_steps: int, max_len: int,
     def slab(params, cache, state):
         offsets = state["offsets"]
 
-        def body(carry, _):
-            cache, pending, frontier, remaining, live = carry
-            write_pos = jnp.where(live, frontier, jnp.int32(max_len))
-            logits, cache = registry.decode_step(
-                cfg, params, cache, pending[:, None], write_pos,
-                masks=None, dist=dist, offsets=offsets)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            frontier = jnp.where(live, frontier + 1, frontier)
-            remaining = jnp.where(live, remaining - 1, remaining)
-            died = (remaining <= 0) | (frontier >= max_len)
-            if eos_id is not None:
-                died |= nxt == eos_id
-            live = live & ~died
-            pending = jnp.where(live, nxt, pending)
-            return (cache, pending, frontier, remaining, live), nxt
+        def step_fn(cache, tokens, write_pos):
+            return registry.decode_step(
+                cfg, params, cache, tokens, write_pos, masks=None,
+                dist=dist, offsets=offsets)
 
-        carry = (cache, state["pending"], state["frontier"],
-                 state["remaining"], state["live"])
-        (cache, pending, frontier, remaining, live), toks = jax.lax.scan(
-            body, carry, None, length=k_steps)
-        state = dict(state, pending=pending, frontier=frontier,
-                     remaining=remaining, live=live)
-        return toks.T, state, cache
+        return _run_slab(k_steps, max_len, eos_id, cache, state,
+                         jnp.int32(max_len), step_fn)
+    return slab
+
+
+def make_paged_prefill_chunk_step(cfg, dist=None):
+    """Paged twin of ``make_prefill_chunk_step``: the chunk's K/V routes
+    through per-lane block tables into the shared page pool.
+    ``read_pages`` must be jit-STATIC (the engine buckets it to a power
+    of two, so the jit cache stays O(log max_pages)).
+
+    prefill(params, cache, tokens, slot, offsets, lane_mask,
+            block_tables, read_pages) -> (last_logits (B, V), new_cache)
+    """
+    def prefill_step(params, cache, tokens, slot, offsets, lane_mask,
+                     block_tables, read_pages):
+        logits, cache = registry.paged_prefill_chunk(
+            cfg, params, cache, tokens, slot, offsets, block_tables,
+            read_pages=read_pages, masks=None, dist=dist,
+            lane_mask=lane_mask)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_paged_decode_slab_step(cfg, k_steps: int, max_len: int,
+                                page_size: int, eos_id: int | None = None,
+                                dist=None, attn_backend: str = "xla"):
+    """Paged twin of ``make_decode_slab_step``: the scan carries the same
+    per-lane state dict plus ``bt`` — each lane's (max_pages,) block
+    table, constant THROUGH a slab (the engine grows allocations only at
+    slab boundaries, where the host syncs anyway). A dead lane parks at
+    logical slot ``max_pages * page_size``: past the table end, so the
+    paged write DROPS instead of clamping onto pool page 0 (which may
+    belong to another lane). ``read_pages`` is jit-static; the engine
+    guarantees ``read_pages * page_size >= min(max frontier + k_steps,
+    max_len)`` so every in-slab query sees its whole live context.
+    Stop logic is the shared ``_run_slab``.
+
+    slab(params, cache, state, read_pages) -> (tokens (B, k_steps),
+                                               new_state, new_cache)
+    """
+    def slab(params, cache, state, read_pages):
+        offsets = state["offsets"]
+        bt = state["bt"]
+
+        def step_fn(cache, tokens, write_pos):
+            return registry.paged_decode_step(
+                cfg, params, cache, tokens, write_pos, bt,
+                read_pages=read_pages, masks=None, dist=dist,
+                offsets=offsets, attn_backend=attn_backend)
+
+        return _run_slab(k_steps, max_len, eos_id, cache, state,
+                         jnp.int32(bt.shape[1] * page_size), step_fn)
     return slab
 
 
