@@ -3,10 +3,13 @@ across block sizes and sparsity levels, CPU-scale model. Sections: the
 jitted decode-step micro-bench, end-to-end tokens/s through the
 continuous-batching engine across decode SLAB sizes (K=1 is the
 per-token baseline: one host sync per token) for BOTH KV-cache layouts
-(paged page-pool vs contiguous slab), and a ``BENCH_serving.json``
-artifact — tok/s, peak KV-cache bytes, and block-table page-read
-counters — so the serving perf trajectory is tracked PR over PR (CI
-uploads it on every run).
+(paged page-pool vs contiguous slab), a SHARED-PREFIX workload with the
+radix-tree prefix cache on vs off (hit rate, prefill tokens skipped,
+referenced-KV peak), and a ``BENCH_serving.json`` artifact — tok/s,
+peak KV-cache bytes, block-table page-read counters, and scheduler
+observability (queue depth, page-gate rejections, queued time) — so
+the serving perf trajectory is tracked PR over PR (CI uploads it on
+every run).
 
     PYTHONPATH=src:. python benchmarks/bench_inference.py \
         [--smoke] [--out BENCH_serving.json]
@@ -14,8 +17,11 @@ uploads it on every run).
 ``--smoke`` runs a tiny config through the same dispatch path (CI guard
 against decode-loop regressions; kernels on the CPU-safe XLA backend)
 and HARD-ASSERTS the paged engine's guarantees: greedy tokens
-bitwise-equal to the contiguous engine, and strictly fewer pages read
-than a dense ``max_len`` scan at short live lengths.
+bitwise-equal to the contiguous engine, strictly fewer pages read than
+a dense ``max_len`` scan at short live lengths, and — for the prefix
+cache — bitwise token parity sharing-on vs sharing-off with a real hit
+rate, prefill-token savings, and a referenced-KV peak strictly under
+the no-sharing baseline on a common-system-prompt workload.
 """
 from __future__ import annotations
 
@@ -124,6 +130,119 @@ def _serving_sweep(cfg, label: str, params, *, sparsity: float,
         })
 
 
+def _shared_prefix_stats(cfg, params, *, prefix_cache: bool,
+                         n_req: int = 8, sys_len: int = 48,
+                         sfx_len: int = 6, max_batch: int = 4,
+                         new_tokens: int = 9, page_size: int = 8,
+                         reps: int = 3) -> dict:
+    """The prefix-cache workload: every request = one common system
+    prompt + a short unique suffix (the agents/few-shot serving shape).
+    With ``prefix_cache=True`` the radix tree should cover the system
+    prompt after the first request — measured stats report the hit
+    rate, prefill tokens skipped, and both KV peaks (referenced = pages
+    live lanes pin at once; occupancy additionally counts reclaimable
+    cached-idle pages)."""
+    rng = np.random.default_rng(0)
+    sys_p = rng.integers(0, cfg.vocab_size, size=(sys_len,)) \
+        .astype(np.int32)
+    prompts = [np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab_size, size=(sfx_len,))
+         .astype(np.int32)]) for _ in range(n_req)]
+    max_len = sys_len + sfx_len + new_tokens + 8
+    eng = engine.Engine(cfg, params, max_batch=max_batch,
+                        max_len=max_len, prefill_chunk=8, slab_k=4,
+                        paged=True, page_size=page_size,
+                        prefix_cache=prefix_cache)
+    for p in prompts:
+        eng.submit(p, new_tokens)
+    eng.run()                               # warm jit (and the tree)
+    best = None
+    for _ in range(reps):
+        eng.reset_stats()
+        for p in prompts:
+            eng.submit(p, new_tokens)
+        eng.run()
+        if best is None or eng.stats["e2e_tok_per_s"] > best["e2e_tok_per_s"]:
+            best = dict(eng.stats)
+    return best
+
+
+def _prefix_sweep(cfg, label: str, params, *, sparsity: float,
+                  results: list, **kw) -> None:
+    """Shared-prefix workload, sharing ON vs OFF (same prompts, same
+    weights): the BENCH_serving.json rows carry hit rate, skipped
+    prefill tokens and the peak-KV comparison PR over PR."""
+    for pc in (False, True):
+        st = _shared_prefix_stats(cfg, params, prefix_cache=pc, **kw)
+        name = f"engine_{label}_prefix_{'on' if pc else 'off'}"
+        extra = (f"hit_rate={st.get('prefix_hit_rate', 0.0):.2f} "
+                 f"skipped={st.get('prefill_tokens_skipped', 0)}"
+                 if pc else "baseline")
+        row(name, 1e6 / max(st["e2e_tok_per_s"], 1e-9),
+            f"e2e_tok_per_s={st['e2e_tok_per_s']:.1f} "
+            f"prefill_tokens={st['prefill_tokens']} "
+            f"peak_kv_ref_kib={st['peak_kv_bytes_referenced'] / 1024:.1f} "
+            + extra)
+        results.append({
+            "name": name, "prefix_cache": pc, "sparsity": sparsity,
+            "e2e_tok_per_s": st["e2e_tok_per_s"],
+            "decode_tok_per_s": st["tok_per_s"],
+            "prompt_tokens": st["prompt_tokens"],
+            "prefill_tokens": st["prefill_tokens"],
+            "prefill_tokens_skipped": st["prefill_tokens_skipped"],
+            "prefix_hit_rate": st.get("prefix_hit_rate", 0.0),
+            "prefix_hits": st["prefix_hits"],
+            "cow_copies": st["cow_copies"],
+            "cache_evicted_pages": st["cache_evicted_pages"],
+            "peak_kv_bytes": st["peak_kv_bytes"],
+            "peak_kv_bytes_referenced": st["peak_kv_bytes_referenced"],
+            "queue_depth_peak": st["queue_depth_peak"],
+            "admission_rejections": st["admission_rejections"],
+            "queued_s_total": st["queued_s_total"],
+            "queued_s_max": st["queued_s_max"],
+        })
+
+
+def _check_prefix_guarantees(cfg, params) -> None:
+    """--smoke hard asserts for the prefix cache: (a) greedy tokens
+    BITWISE-equal sharing-on vs sharing-off on a common-system-prompt
+    workload, (b) a real hit rate with prefill-token savings, and
+    (c) the referenced-KV peak strictly under the no-sharing baseline
+    (shared pages pinned once across lanes)."""
+    rng = np.random.default_rng(2)
+    sys_p = rng.integers(0, cfg.vocab_size, size=(24,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [sys_p, rng.integers(0, cfg.vocab_size, size=(4,))
+         .astype(np.int32)]) for _ in range(6)]
+
+    def run(pc):
+        eng = engine.Engine(cfg, params, max_batch=2, max_len=64,
+                            prefill_chunk=8, slab_k=4, page_size=8,
+                            prefix_cache=pc)
+        if pc:          # warm the tree like a running server's would be
+            eng.submit(sys_p, 1)
+            eng.run()
+            eng.reset_stats()
+        uids = [eng.submit(p, 7) for p in prompts]
+        res = eng.run()
+        return [res[u].tokens for u in uids], eng.stats
+
+    off, st_off = run(False)
+    on, st_on = run(True)
+    for a, b in zip(off, on):
+        np.testing.assert_array_equal(a, b)
+    assert st_on["prefix_hit_rate"] > 0, st_on
+    assert st_on["prefill_tokens"] < st_off["prefill_tokens"], st_on
+    assert (st_on["peak_kv_bytes_referenced"]
+            < st_off["peak_kv_bytes_referenced"]), (st_on, st_off)
+    print("# prefix-cache parity OK: "
+          f"hit_rate={st_on['prefix_hit_rate']:.2f} "
+          f"prefill_tokens={st_on['prefill_tokens']} "
+          f"(baseline {st_off['prefill_tokens']}) "
+          f"peak_kv_ref={st_on['peak_kv_bytes_referenced']} "
+          f"(baseline {st_off['peak_kv_bytes_referenced']})")
+
+
 def _check_paged_guarantees(cfg, params) -> None:
     """--smoke hard asserts: the paged engine is not just fast, it is
     CORRECT (bitwise token parity with the contiguous engine) and
@@ -168,6 +287,9 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json"):
         _serving_sweep(scfg, "packed_s70", packed, sparsity=0.7,
                        results=results, ragged=True, slab_sizes=(1, 4),
                        n_req=4, max_batch=2, new_tokens=9)
+        _prefix_sweep(cfg, "dense", params, sparsity=0.0,
+                      results=results, n_req=4, max_batch=2,
+                      sys_len=24, sfx_len=4, new_tokens=5)
     else:
         cfg = bench_cfg(num_layers=2)
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
@@ -198,6 +320,11 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json"):
                            results=results, paged=paged)
         _serving_sweep(scfg, "packed_s90", packed, sparsity=0.9,
                        results=results, ragged=True)
+        # ---- shared-prefix workload: radix-tree page sharing on/off
+        _prefix_sweep(cfg, "dense", params, sparsity=0.0,
+                      results=results)
+        _prefix_sweep(scfg, "packed_s90", packed, sparsity=0.9,
+                      results=results)
 
     artifact = {"bench": "serving", "smoke": smoke, "rows": results}
     with open(out, "w") as f:
@@ -209,6 +336,7 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json"):
         # upload preserves the measured rows even when parity breaks —
         # exactly the runs where the trajectory matters most
         _check_paged_guarantees(*check)
+        _check_prefix_guarantees(*check)
 
 
 if __name__ == "__main__":

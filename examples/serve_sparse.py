@@ -34,6 +34,9 @@ def main():
                     help="vary prompt lengths across the batch")
     ap.add_argument("--slab-k", type=int, default=8,
                     help="decode steps per jitted slab (1 = per-token)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share prompt-prefix KV pages across requests "
+                         "through the radix-tree prefix cache")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -61,7 +64,8 @@ def main():
             return engine.generate(cfg, p, prompts,
                                    max_new_tokens=args.new_tokens,
                                    max_batch=args.max_batch or args.batch,
-                                   slab_k=args.slab_k)
+                                   slab_k=args.slab_k,
+                                   prefix_cache=args.prefix_cache)
     else:
         prompts = jnp.asarray(rng.integers(
             0, cfg.vocab_size, (args.batch, 8)), jnp.int32)

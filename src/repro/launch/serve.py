@@ -48,6 +48,11 @@ def main():
     ap.add_argument("--n-pages", type=int, default=0,
                     help="KV pool pages (default: contiguous-equivalent "
                          "max_batch * ceil(max_len / page_size))")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix-tree prefix cache: share prompt-prefix "
+                         "KV pages across requests (refcounted, "
+                         "copy-on-write boundary pages, LRU eviction; "
+                         "paged mode only)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -104,11 +109,14 @@ def main():
         max_batch=args.max_batch or args.batch,
         prefill_chunk=args.prefill_chunk, slab_k=args.slab_k,
         paged=not args.contiguous, page_size=args.page_size,
-        n_pages=args.n_pages or None)
+        n_pages=args.n_pages or None, prefix_cache=args.prefix_cache)
     print(f"generated {len(toks)} seqs — {stats['tok_per_s']:.1f} tok/s "
           f"({stats['decode_slabs']} slabs of {args.slab_k}, "
           f"{stats['prefill_chunks']} prefill chunks, "
-          f"peak_kv_kib={stats['peak_kv_bytes'] / 1024:.1f})")
+          f"peak_kv_kib={stats['peak_kv_bytes'] / 1024:.1f})"
+          + (f" prefix_hit_rate={stats['prefix_hit_rate']:.2f} "
+             f"skipped={stats['prefill_tokens_skipped']}"
+             if args.prefix_cache else ""))
     for p, t in list(zip(prompts, toks))[:2]:
         print(t[p.size:])
 

@@ -50,7 +50,22 @@ the accelerator saturated across ragged, continuously-arriving requests:
     FREE PAGES (a group that would overdraw the pool waits — strict
     FIFO, head-of-line blocking by design). Pages for a request's whole
     extent (group width + decode budget, capped at ``max_len``) are
-    pinned at admission, so a slab can never run out of pages mid-slab.
+    pinned at admission, so a slab can never run out of pages mid-slab;
+  * **prefix cache** (``prefix_cache=True``, paged only) — a host-side
+    radix tree over token IDs (serving/prefix_cache.py) shares pool
+    pages across requests: at admission the prompt's longest cached
+    prefix is matched, the matched pages are REFCOUNT-pinned and dropped
+    straight into the lane's block table (zero prefill compute, zero KV
+    writes for them), and only the uncovered tail is chunk-prefilled; a
+    partially-filled boundary page is COPY-ON-WRITE duplicated first, so
+    decode never writes a page with refcount > 1. Finished sequences are
+    inserted back into the tree (their pages park as cached-idle —
+    reclaimed LRU-first under pool pressure), and the admission gate
+    sees the EFFECTIVE page cost: shared pages are free, capacity is
+    free + reclaimable-cached. Prefix-cached admissions prefill per-lane
+    at ``offset == 0`` (sharing is positional: a pool page holds rope'd
+    K at canonical positions), instead of as one right-aligned group —
+    greedy tokens stay bitwise-identical either way.
 
 Greedy decode only (the paper's serving benchmark); temperature sampling
 stays on the ``serve_loop`` oracle path.
@@ -66,8 +81,10 @@ import numpy as np
 
 from repro.models import registry
 from repro.serving.pages import PagePool
+from repro.serving.prefix_cache import Match, PrefixCache
 from repro.serving.scheduler import FIFOScheduler, Request
-from repro.serving.step import (make_decode_slab_step,
+from repro.serving.step import (make_copy_pages_step,
+                                make_decode_slab_step,
                                 make_paged_decode_slab_step,
                                 make_paged_prefill_chunk_step,
                                 make_prefill_chunk_step)
@@ -119,6 +136,14 @@ class Engine:
     ``attn_backend`` picks the paged decode attention implementation:
     'xla' (gather, the oracle), 'pallas' (blocked-gather TPU kernel), or
     'pallas_interp' (kernel in interpret mode, CPU tests).
+
+    ``prefix_cache=True`` (paged only) shares prompt-prefix KV pages
+    across requests through a refcounted radix tree
+    (serving/prefix_cache.py): matched pages skip prefill entirely, a
+    shared boundary page is copy-on-write duplicated before the lane
+    may write it, and finished sequences are re-inserted for future
+    hits (LRU-evicted under pool pressure). Greedy tokens are
+    bitwise-identical with sharing on or off.
     """
 
     def __init__(self, cfg, params, *, max_batch: int, max_len: int,
@@ -126,7 +151,8 @@ class Engine:
                  eos_id: int | None = None, dist=None,
                  scheduler: FIFOScheduler | None = None,
                  paged: bool = True, page_size: int = 16,
-                 n_pages: int | None = None, attn_backend: str = "xla"):
+                 n_pages: int | None = None, attn_backend: str = "xla",
+                 prefix_cache: bool = False):
         if not registry.supports_prefill_chunk(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} is not KV-cache servable by the "
@@ -135,6 +161,9 @@ class Engine:
             raise NotImplementedError(
                 f"family {cfg.family!r} has no paged KV cache; pass "
                 "paged=False")
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache=True requires paged=True "
+                             "(pages are the unit of sharing)")
         assert slab_k >= 1
         self.cfg = cfg
         self.params = params
@@ -155,6 +184,7 @@ class Engine:
             "remaining": np.zeros(max_batch, np.int32),
             "live": np.zeros(max_batch, bool),
         }
+        self.pcache: PrefixCache | None = None
         if paged:
             self.page_size = page_size
             per_lane = -(-max_len // page_size)
@@ -164,6 +194,9 @@ class Engine:
             self.pool = PagePool(self.n_pages, page_size)
             self.cache = registry.init_paged_cache(cfg, self.n_pages,
                                                    page_size)
+            if prefix_cache:
+                self.pcache = PrefixCache(self.pool)
+                self._copy_pages = jax.jit(make_copy_pages_step())
             self._mirror["bt"] = np.zeros((max_batch, self.max_pages),
                                           np.int32)
             self._prefill = jax.jit(
@@ -195,7 +228,21 @@ class Engine:
                       # what the block-table gather touched vs what a
                       # dense max_len read would have
                       "pages_read": 0, "pages_read_dense_equiv": 0,
-                      "peak_kv_pages": 0}
+                      "peak_kv_pages": 0,
+                      # scheduler observability: queue depth high-water,
+                      # page-gate rejections, request queued time
+                      "queue_depth_peak": 0, "admission_rejections": 0,
+                      "queued_s_total": 0.0, "queued_s_max": 0.0,
+                      # prefix-cache accounting: prompt_tokens is the
+                      # demand, prefill_tokens what was actually
+                      # computed, the difference the radix-tree hits
+                      "prompt_tokens": 0, "prefix_hits": 0,
+                      "prefix_misses": 0, "prefill_tokens_skipped": 0,
+                      "cow_copies": 0, "cache_evicted_pages": 0}
+        if hasattr(self.scheduler, "reset_stats"):
+            self.scheduler.reset_stats()
+        if getattr(self, "pool", None) is not None:
+            self.pool.reset_peaks()
 
     # ------------------------------------------------------------- memory
     @property
@@ -241,6 +288,8 @@ class Engine:
                     f"({self.n_pages * self.page_size} cache slots) — "
                     "shrink the request or grow n_pages")
         self.scheduler.submit(req)
+        self.stats["queue_depth_peak"] = max(
+            self.stats["queue_depth_peak"], len(self.scheduler))
         return uid
 
     # ------------------------------------------------------- lane helpers
@@ -279,11 +328,77 @@ class Engine:
             min(max(w + r.max_new_tokens - 1, w), self.max_len))
             for r in group)
 
+    def _extent_pages(self, r: Request) -> int:
+        """Pages covering one prefix-cached lane's whole extent (its own
+        prompt is the group width: admission is per-request so every
+        lane sits at offset 0 — see ``_admit_one``)."""
+        return self._page_cost([r])
+
+    def _effective_match(self, r: Request):
+        """Radix match for admission, with the boundary-page CoW DROPPED
+        when the request's extent fills the whole pool: the CoW needs
+        the shared original and the private copy alive at once (extent
+        + 1 pages), which such a request could never pin — keeping the
+        tail match would make it permanently inadmissible (livelock)
+        even though it fits cold. Full-page sharing never costs more
+        than a cold admission, so it is always kept.
+        Returns (match, extent_pages)."""
+        m = self.pcache.match(r.prompt)
+        extent = self._extent_pages(r)
+        if m.tail_page is not None and extent >= self.n_pages:
+            m = Match(m.pages, len(m.pages) * self.page_size)
+        return m, extent
+
+    def _page_cost_shared(self):
+        """EFFECTIVE page-cost gate for prefix-shared admission, to be
+        compared against ``free + reclaimable``: pages already in the
+        radix tree cost nothing NEW, but matched pages that are
+        currently cached-idle must be counted once — the admission will
+        pin them, so they stop being reclaimable. Returns a
+        ``group -> cost`` callable that memoizes the per-request radix
+        match: the scheduler probes growing trial prefixes of the same
+        queue, so each request is matched ONCE per admission attempt,
+        not once per trial."""
+        memo: dict[int, tuple[int, list[int]]] = {}
+
+        def per_request(r: Request) -> tuple[int, list[int]]:
+            if id(r) not in memo:
+                m, extent = self._effective_match(r)
+                pinned = m.pages + ([m.tail_page]
+                                    if m.tail_page is not None else [])
+                memo[id(r)] = (
+                    extent - len(m.pages),
+                    [p for p in pinned if self.pool.refcount(p) == 0])
+            return memo[id(r)]
+
+        def cost(group: list[Request]) -> int:
+            new_pages = 0
+            idle_matched: set[int] = set()
+            for r in group:
+                new, idle = per_request(r)
+                new_pages += new
+                idle_matched.update(idle)
+            return new_pages + len(idle_matched)
+        return cost
+
     def _finish(self, i: int, truncated: bool = False) -> GenResult:
         lane = self.lanes[i]
         self.lanes[i] = None
         self._mirror["live"][i] = False
         if self.paged and lane.pages:
+            if self.pcache is not None and lane.offset == 0:
+                # insert-on-finish: donate the pages covering every slot
+                # this lane actually wrote — prompt AND emitted
+                # continuation (slot s holds token seq[s]; offset 0 means
+                # slot == canonical position, the sharing precondition).
+                # Donated pages park as cached-idle on release below;
+                # coverage the tree already has just frees.
+                frontier = int(self._mirror["frontier"][i])
+                seq = np.concatenate(
+                    [lane.req.prompt,
+                     np.asarray(lane.generated, np.int32)])[:frontier]
+                self.pcache.insert(seq,
+                                   lane.pages[:self.pool.slots_for(frontier)])
             self.pool.release(lane.pages)
             self._mirror["bt"][i] = 0
         self._dirty = True
@@ -293,8 +408,19 @@ class Engine:
                          np.asarray(lane.generated, np.int32), truncated)
 
     # ----------------------------------------------------------- admission
+    def _note_admitted(self, reqs: list[Request]) -> None:
+        now = time.monotonic()
+        for r in reqs:
+            q = max(0.0, now - r.queued_at)
+            self.stats["queued_s_total"] += q
+            self.stats["queued_s_max"] = max(self.stats["queued_s_max"], q)
+        self.stats["admitted"] += len(reqs)
+
     def _admit(self) -> None:
         free = [i for i, l in enumerate(self.lanes) if l is None]
+        if self.pcache is not None:
+            self._admit_shared(free)
+            return
         if self.paged:
             reqs = self.scheduler.admit(len(free), self.pool.free_pages,
                                         self._page_cost)
@@ -325,28 +451,44 @@ class Engine:
             m["live"][i] = True
             new_lanes.append(i)
         self._dirty = True     # one upload, in step() before the slab
-        self.stats["admitted"] += len(reqs)
+        self._note_admitted(reqs)
 
-        # chunked batched prefill over [0, width), right-aligned; the
-        # first chunk may be short (width % C), the rest are C wide so
-        # the jit cache sees at most C distinct shapes.
+        # chunked batched prefill over [0, width), right-aligned
         tokens = np.zeros((self.max_batch, width), np.int32)
         for i in new_lanes:
             p = self.lanes[i].req.prompt
             tokens[i, width - p.size:] = p
+        self._run_prefill(new_lanes, tokens, 0, width)
+        self.stats["prefill_tokens"] += sum(r.prompt_len for r in reqs)
+        self.stats["prompt_tokens"] += sum(r.prompt_len for r in reqs)
+
+    def _run_prefill(self, lane_ids: list[int], tokens: np.ndarray,
+                     start: int, cover_slots: int) -> None:
+        """The chunked-prefill loop shared by group admission (whole
+        width from slot 0) and prefix-cached per-lane admission (tail
+        only, from slot ``start``): runs ``tokens[:, start:]`` through
+        ``prefill_chunk`` in whole chunks (the first may be short, the
+        rest ``self.chunk`` wide, so the jit cache sees at most C
+        distinct shapes), lanes outside ``lane_ids`` shielded by the
+        lane mask, then folds each lane's FIRST generated token into
+        the mirror. ``cover_slots`` bounds the paged attention read.
+        Callers account prefill_tokens/prompt_tokens themselves (pad
+        and shared-prefix slots don't count as prefilled tokens)."""
+        width = tokens.shape[1]
         lane_mask = np.zeros((self.max_batch,), bool)
-        lane_mask[new_lanes] = True
-        offsets = jnp.asarray(m["offsets"])
+        lane_mask[lane_ids] = True
+        offsets = jnp.asarray(self._mirror["offsets"])
         mask_j = jnp.asarray(lane_mask)
         toks_j = jnp.asarray(tokens)
         if self.paged:
-            bt_j = jnp.asarray(m["bt"])
-            r_pf = _pow2_bucket(self.pool.slots_for(width),
+            bt_j = jnp.asarray(self._mirror["bt"])
+            r_pf = _pow2_bucket(self.pool.slots_for(cover_slots),
                                 self.max_pages)
         last = None
-        pos = 0
-        rem = width % self.chunk
-        sizes = ([rem] if rem else []) + [self.chunk] * (width // self.chunk)
+        pos = start
+        span = width - start
+        rem = span % self.chunk
+        sizes = ([rem] if rem else []) + [self.chunk] * (span // self.chunk)
         t0 = time.time()
         for c in sizes:
             if self.paged:
@@ -354,10 +496,10 @@ class Engine:
                     self.params, self.cache, toks_j[:, pos:pos + c],
                     jnp.int32(pos), offsets, mask_j, bt_j,
                     read_pages=r_pf)
-                self.stats["pages_read"] += r_pf * len(new_lanes) * c
+                self.stats["pages_read"] += r_pf * len(lane_ids) * c
                 self.stats["pages_read_dense_equiv"] += (
                     self.pool.slots_for(self.max_len)
-                    * len(new_lanes) * c)
+                    * len(lane_ids) * c)
             else:
                 last, self.cache = self._prefill(
                     self.params, self.cache, toks_j[:, pos:pos + c],
@@ -366,11 +508,88 @@ class Engine:
             self.stats["prefill_chunks"] += 1
         first = np.asarray(jax.block_until_ready(jnp.argmax(last, -1)))
         self.stats["prefill_s"] += time.time() - t0
-        self.stats["prefill_tokens"] += sum(r.prompt_len for r in reqs)
-        for i in new_lanes:
-            m["pending"][i] = int(first[i])
+        for i in lane_ids:
+            self._mirror["pending"][i] = int(first[i])
             self.lanes[i].generated.append(int(first[i]))
             self.stats["generated_tokens"] += 1
+
+    # ------------------------------------------- prefix-cached admission
+    def _admit_shared(self, free: list[int]) -> None:
+        """Admission with the radix-tree prefix cache: the scheduler
+        gate sees the EFFECTIVE page cost (shared pages are free,
+        capacity is free + reclaimable-cached), and each admitted
+        request is prefilled as its own width-``prompt_len`` group at
+        ``offset == 0`` — sharing is positional, so every lane's cache
+        slot must equal its logical position. A request whose re-checked
+        match no longer covers what the gate assumed (a concurrent
+        eviction inside this batch) is returned to the queue HEAD."""
+        avail = self.pool.free_pages + self.pcache.reclaimable()
+        reqs = self.scheduler.admit(len(free), avail,
+                                    self._page_cost_shared())
+        for j, r in enumerate(reqs):
+            if not self._admit_one(free[0], r):
+                self.scheduler.push_front(reqs[j:])
+                return
+            free.pop(0)
+            self._note_admitted([r])
+
+    def _admit_one(self, i: int, r: Request) -> bool:
+        """match -> pin shared pages -> evict-for-room -> alloc own
+        pages -> CoW the boundary page -> tail prefill. Returns False
+        when the pool can't cover the request — no lane/page state is
+        held, but the eviction pass may already have dropped cold
+        cached-idle entries (that reclaim is never undone)."""
+        m, extent = self._effective_match(r)
+        # pin everything matched BEFORE eviction/allocation can touch
+        # it: the tail page only until its copy lands, the full pages
+        # for the lane's lifetime (they go into its block table)
+        pin_tail = [m.tail_page] if m.tail_page is not None else []
+        self.pool.retain(m.pages + pin_tail)
+        own_need = extent - len(m.pages)
+        short = own_need - self.pool.free_pages
+        if short > 0:
+            self.stats["cache_evicted_pages"] += self.pcache.evict(short)
+        if own_need > self.pool.free_pages:
+            self.pool.release(m.pages + pin_tail)   # un-pin, re-queue
+            return False
+        own = self.pool.alloc(own_need)
+        if m.tail_page is not None:
+            # copy-on-write: the lane keeps writing this page (prompt
+            # tail, then decode) — give it a private copy; the shared
+            # original stays read-only in the tree
+            self.cache = self._copy_pages(
+                self.cache, jnp.asarray([m.tail_page], jnp.int32),
+                jnp.asarray([own[0]], jnp.int32))
+            self.pool.release(pin_tail)
+            self.stats["cow_copies"] += 1
+        pages = m.pages + own           # logical page order
+        self.lanes[i] = _Lane(r, 0, [], pages=pages)
+        mir = self._mirror
+        mir["bt"][i] = 0
+        mir["bt"][i, :len(pages)] = pages
+        mir["offsets"][i] = 0
+        mir["frontier"][i] = r.prompt_len
+        mir["remaining"][i] = r.max_new_tokens - 1
+        mir["pending"][i] = 0
+        mir["live"][i] = True
+        self._dirty = True
+        self.stats["prompt_tokens"] += r.prompt_len
+        self.stats["prefix_hits"] += int(m.matched_tokens > 0)
+        self.stats["prefix_misses"] += int(m.matched_tokens == 0)
+        self.stats["prefill_tokens_skipped"] += m.matched_tokens
+        self._prefill_lane(i, r, m.matched_tokens)
+        return True
+
+    def _prefill_lane(self, i: int, r: Request, matched: int) -> None:
+        """Chunk-prefill ONLY the uncovered tail ``[matched, plen)`` of
+        one lane's prompt (``matched`` slots are already backed by
+        shared — or CoW-copied — pages holding identical K/V, so the
+        logits come out bitwise-equal to a full prefill)."""
+        plen = r.prompt_len
+        tokens = np.zeros((self.max_batch, plen), np.int32)
+        tokens[i] = r.prompt
+        self._run_prefill([i], tokens, matched, plen)
+        self.stats["prefill_tokens"] += plen - matched
 
     def _sweep_finished(self, finished: list[GenResult]) -> None:
         """Evict lanes whose budget is spent, that emitted eos (the
@@ -454,9 +673,22 @@ class Engine:
             if total_s > 0 else 0.0)
         if self.paged:
             self.stats["peak_kv_pages"] = self.pool.peak_in_use
+            # pages live lanes pin at once (shared pages count ONCE):
+            # the rightsized-pool requirement — cached-idle pages are
+            # reclaimable on demand, so they are excluded here while
+            # peak_kv_bytes (occupancy watermark) includes them
+            self.stats["peak_kv_bytes_referenced"] = (
+                self.pool.peak_referenced * self.page_bytes)
         self.stats["peak_kv_bytes"] = self.kv_bytes_peak
         self.stats["kv_bytes_contiguous_equiv"] = \
             self.kv_bytes_contiguous_equiv
+        self.stats["admission_rejections"] = getattr(
+            self.scheduler, "rejections", 0)
+        if self.pcache is not None:
+            self.stats["prefix_hit_rate"] = (
+                self.stats["prefill_tokens_skipped"]
+                / max(1, self.stats["prompt_tokens"]))
+            self.stats["cached_pages"] = self.pool.cached_pages
         return out
 
 
@@ -465,7 +697,7 @@ def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
              prefill_chunk: int = 16, slab_k: int = 8,
              max_batch: int | None = None, dist=None, paged: bool = True,
              page_size: int = 16, n_pages: int | None = None,
-             attn_backend: str = "xla"):
+             attn_backend: str = "xla", prefix_cache: bool = False):
     """Batch-convenience wrapper: list of ragged 1-D prompts (or a 2-D
     equal-length array) -> (list of per-request token arrays, stats).
 
@@ -482,7 +714,7 @@ def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
                  max_len=max_len, prefill_chunk=prefill_chunk,
                  slab_k=slab_k, eos_id=eos_id, dist=dist, paged=paged,
                  page_size=page_size, n_pages=n_pages,
-                 attn_backend=attn_backend)
+                 attn_backend=attn_backend, prefix_cache=prefix_cache)
     uids = [eng.submit(p, max_new_tokens) for p in prompts]
     res = eng.run()
     return [res[u].tokens for u in uids], eng.stats

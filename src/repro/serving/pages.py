@@ -1,24 +1,47 @@
-"""Free-list page allocator for the shared paged KV pool.
+"""Refcounted free-list page allocator for the shared paged KV pool.
 
 The engine's pool holds ``n_pages`` pages of ``page_size`` cache slots
 each, shared by every lane across all layers (one pool page = that page
 index in EVERY layer of the (layers, n_pages, page_size, KV, hd) pool
 arrays — block tables stay layer-independent). This class is the pure
-host-side bookkeeping: which pages are free, which lane owns which, and
-the peak-in-use watermark the serving benchmark reports as the paged
-cache's true memory footprint.
+host-side bookkeeping: which pages are free, how many references each
+owned page carries, and the peak-occupancy watermark the serving
+benchmark reports as the paged cache's true memory footprint.
+
+With the prefix cache (serving/prefix_cache.py) one physical page can
+back the SAME prompt prefix in several lanes at once, so ownership is a
+refcount, not a single owner, and every page is in exactly one of three
+states:
+
+  * **free** — on the free list (``refcount == 0``, not cached);
+  * **referenced** — pinned by one or more lanes (``refcount >= 1``);
+    the prefix cache may ALSO hold it (``cached``), which only matters
+    once the last lane lets go;
+  * **cached-idle** — held only by the prefix cache (``refcount == 0``
+    and ``cached``): its KV is valid and matchable but no lane reads it,
+    so it is reclaimable — LRU eviction of cold tree nodes turns it back
+    into a free page under pressure.
+
+``free_pages + referenced + cached_idle == n_pages`` always (the
+allocator asserts it after every mutation). Decode NEVER writes a page
+with ``refcount > 1`` — the engine copy-on-writes the shared boundary
+page before a lane may touch it.
 
 Pages are handed out low-index-first so a fresh engine's early block
-tables are dense and the gather stays cache-friendly; `release` returns
-pages for immediate reuse (stale K/V in a reused page needs no zeroing —
-the causal/offset masking that hides the dense cache's garbage tail
-hides it identically through the block table, models/attention.py).
+tables are dense and the gather stays cache-friendly; a released page
+returns for immediate reuse (stale K/V in a reused page needs no
+zeroing — the causal/offset masking that hides the dense cache's
+garbage tail hides it identically through the block table,
+models/attention.py). Releasing a page that is already free raises
+``RuntimeError`` instead of silently double-listing it — a double-free
+would later hand ONE physical page to TWO lanes as if each owned it
+exclusively (cross-lane KV corruption).
 """
 from __future__ import annotations
 
 
 class PagePool:
-    """Host-side free list over ``n_pages`` pool pages."""
+    """Host-side refcounted free list over ``n_pages`` pool pages."""
 
     def __init__(self, n_pages: int, page_size: int):
         assert n_pages >= 1 and page_size >= 1
@@ -26,32 +49,161 @@ class PagePool:
         self.page_size = page_size
         # stack, highest index on top -> alloc pops lowest-numbered first
         self._free = list(range(n_pages - 1, -1, -1))
+        self._rc = [0] * n_pages          # lane references per page
+        self._cached = [False] * n_pages  # held by the prefix cache
+        self._n_ref = 0                   # pages with rc > 0
+        self._n_cached_idle = 0           # cached pages with rc == 0
         self.peak_in_use = 0
+        # high-water of REFERENCED pages: what live lanes pin at once.
+        # This is the memory a rightsized pool must provide (cached-idle
+        # pages are reclaimable on demand), and the apples-to-apples
+        # peak the benchmark compares sharing-on vs sharing-off — shared
+        # pages count ONCE however many lanes read them.
+        self.peak_referenced = 0
 
+    # ------------------------------------------------------------ queries
     @property
     def free_pages(self) -> int:
         return len(self._free)
 
     @property
     def in_use(self) -> int:
+        """Occupied pages (referenced + cached-idle): the pool's live
+        memory footprint."""
         return self.n_pages - len(self._free)
 
+    @property
+    def referenced(self) -> int:
+        """Pages pinned by at least one lane."""
+        return self._n_ref
+
+    @property
+    def cached_idle(self) -> int:
+        """Pages held ONLY by the prefix cache — reclaimable via tree
+        eviction, but not on the free list."""
+        return self._n_cached_idle
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages the prefix cache holds (idle or also lane-referenced)."""
+        return sum(self._cached)
+
+    def refcount(self, page: int) -> int:
+        return self._rc[page]
+
+    def is_cached(self, page: int) -> bool:
+        return self._cached[page]
+
+    def _check(self) -> None:
+        # O(1): the incremental counters must always partition the pool
+        # (tests/test_pages_properties.py cross-checks them against a
+        # full shadow model)
+        free, ref, ci = len(self._free), self._n_ref, self._n_cached_idle
+        assert free + ref + ci == self.n_pages, (
+            f"page accounting broke: {free} free + {ref} referenced + "
+            f"{ci} cached-idle != {self.n_pages}")
+
+    # ---------------------------------------------------------- lifecycle
     def alloc(self, n: int) -> list[int]:
-        """Pop ``n`` free pages; raises RuntimeError when the pool can't
-        supply them (the engine's admission gate makes that a bug, not a
-        runtime condition)."""
+        """Pop ``n`` free pages at refcount 1; raises RuntimeError when
+        the free list can't supply them (the engine's admission gate —
+        which counts cached-idle pages it can evict first — makes that a
+        bug, not a runtime condition)."""
         if n > len(self._free):
             raise RuntimeError(
                 f"page pool exhausted: requested {n} pages, "
                 f"{len(self._free)} free of {self.n_pages}")
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._rc[p] = 1
+        self._n_ref += n
         self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.peak_referenced = max(self.peak_referenced, self._n_ref)
+        self._check()
         return pages
 
-    def release(self, pages: list[int]) -> None:
+    def retain(self, pages: list[int]) -> None:
+        """Add one lane reference per page. A cached-idle page moves to
+        referenced (prefix-cache hit pins the shared pages); a free page
+        cannot be retained — it holds no live KV."""
         for p in pages:
             assert 0 <= p < self.n_pages
-        self._free.extend(reversed(pages))
+            if self._rc[p] == 0 and not self._cached[p]:
+                raise RuntimeError(
+                    f"retain of free page {p}: nothing owns it")
+        for p in pages:
+            if self._rc[p] == 0:            # cached-idle -> referenced
+                self._n_ref += 1
+                self._n_cached_idle -= 1
+            self._rc[p] += 1
+        self.peak_referenced = max(self.peak_referenced, self._n_ref)
+        self._check()
+
+    def release(self, pages: list[int]) -> None:
+        """Drop one lane reference per page. The last reference frees
+        the page — unless the prefix cache holds it, in which case it
+        parks as cached-idle (evictable, not free). Releasing an
+        unreferenced page raises: a double-free would put one physical
+        page on the free list twice and the allocator would later hand
+        it to two lanes."""
+        for p in pages:
+            assert 0 <= p < self.n_pages
+            if self._rc[p] == 0:
+                state = "cached-idle" if self._cached[p] else "free"
+                raise RuntimeError(
+                    f"double free of page {p}: it is already {state}")
+        freed = []
+        for p in pages:
+            self._rc[p] -= 1
+            if self._rc[p] == 0:
+                self._n_ref -= 1
+                if self._cached[p]:
+                    self._n_cached_idle += 1
+                else:
+                    freed.append(p)
+        self._free.extend(reversed(freed))   # recycle low-index-first
+        self._check()
+
+    # -------------------------------------------------------- prefix cache
+    def cache_add(self, pages: list[int]) -> None:
+        """The prefix cache takes (shared) ownership of ``pages``. Called
+        while the donating lane still holds its reference, so the page
+        never transits the free list; once the lane releases, the page
+        parks as cached-idle instead of freeing."""
+        for p in pages:
+            assert 0 <= p < self.n_pages
+            if self._rc[p] == 0 and not self._cached[p]:
+                raise RuntimeError(
+                    f"cache_add of free page {p}: donate before release")
+        for p in pages:
+            self._cached[p] = True
+        self._check()
+
+    def cache_drop(self, pages: list[int]) -> None:
+        """Prefix-cache eviction: a cached page with no lane references
+        returns to the free list. Dropping a page some lane still reads
+        is a bug (the tree must only evict idle nodes)."""
+        for p in pages:
+            assert 0 <= p < self.n_pages
+            if not self._cached[p]:
+                raise RuntimeError(f"cache_drop of uncached page {p}")
+            if self._rc[p] > 0:
+                raise RuntimeError(
+                    f"cache_drop of page {p} still referenced by "
+                    f"{self._rc[p]} lane(s)")
+        for p in pages:
+            self._cached[p] = False
+            self._n_cached_idle -= 1
+            self._free.append(p)
+        self._check()
+
+    # ------------------------------------------------------------- helpers
+    def reset_peaks(self) -> None:
+        """Restart both watermarks from the CURRENT state (the engine's
+        ``reset_stats`` calls this so per-run peak measurements don't
+        inherit earlier runs' high-water marks)."""
+        self.peak_in_use = self.in_use
+        self.peak_referenced = self._n_ref
 
     def slots_for(self, n_slots: int) -> int:
         """Pages covering ``n_slots`` logical cache slots."""

@@ -1,0 +1,308 @@
+"""Radix-tree prefix cache: refcounted copy-on-write KV page sharing.
+
+BLaST's thesis is that inference cost is data movement; the paged pool
+(serving/pages.py) already bounds attention reads by live context, but
+every request still RE-PREFILLS and RE-STORES its prompt even when
+thousands of requests share a system prompt or few-shot prefix. This
+module deduplicates that: a host-side radix tree over token-ID
+sequences whose nodes own pool pages, so a new request's longest cached
+prefix is matched at admission, its block table is populated with the
+SHARED page indices (zero prefill compute and zero KV writes for the
+matched pages), and only the uncovered tail is chunk-prefilled.
+
+Layout — the tree is PAGE-CHUNKED so page ownership is never split
+across nodes:
+
+  * an **edge** is a run of full ``page_size``-token chunks, one pool
+    page per chunk (edges split only at page boundaries, so a radix
+    split just redistributes ``(chunk, page)`` pairs between the two
+    halves);
+  * each node additionally carries **tails**: partially-filled boundary
+    pages — a cached sequence that ends mid-page parks its last
+    ``1..page_size-1`` tokens here. A request may match INTO a tail, but
+    since it will keep writing the same physical page (its own prompt
+    tail, then decode), the engine **copy-on-writes** the tail page
+    first: shared pages are read-only to everyone — decode never
+    touches a page with ``refcount > 1``.
+
+Sharing is positional: a pool page caches K/V with rope applied at the
+CANONICAL logical positions ``[j*page_size, (j+1)*page_size)``, so a
+page is only valid for a lane whose cache slot ``s`` holds logical
+position ``s`` — i.e. lanes admitted at ``offset == 0``. The engine
+guarantees that by prefilling prefix-cached admissions per-lane
+(width = own prompt length) instead of as a right-aligned ragged group.
+
+Lifecycle against the pool's three page states (pages.py):
+
+  * ``match``      — pure lookup; the engine then ``retain``s the
+    matched pages (cached-idle -> referenced) before any eviction or
+    allocation can reclaim them;
+  * ``insert``     — called when a request finishes, BEFORE the lane
+    releases its pages: full pages (and the partial boundary page) of
+    the finished sequence are donated via ``cache_add``, so when the
+    lane's reference drops they park as cached-idle instead of freeing.
+    Chunks the tree already holds are not duplicated — the lane's own
+    copy simply frees;
+  * ``evict``      — LRU reclamation of cold, unreferenced tails and
+    leaf-edge suffixes; "free" capacity for admission is
+    ``free + cached_idle`` (pages.py), and the engine calls ``evict``
+    to convert the cached-idle part into free pages on demand.
+
+The tree itself stores no tensor data — pages live in the device pool;
+matching, insertion and eviction are O(prompt) host work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving.pages import PagePool
+
+
+@dataclasses.dataclass
+class Match:
+    """Result of a prefix lookup for one prompt.
+
+    ``pages``: fully-valid shared pages, logical order — they cover
+    slots ``[0, len(pages) * page_size)`` and may go straight into the
+    lane's block table (after ``retain``). ``tail_page``/``tail_matched``
+    name a partially-valid boundary page: its first ``tail_matched``
+    rows continue the prefix, but the lane must copy-on-write it before
+    writing the rest of the page. ``matched_tokens`` counts both parts
+    (always < prompt length: at least one token is left to prefill so
+    admission can produce the first logits)."""
+    pages: list[int]
+    matched_tokens: int
+    tail_page: int | None = None
+    tail_matched: int = 0
+
+
+@dataclasses.dataclass
+class _Tail:
+    tokens: tuple          # 1..page_size-1 tokens past the node's chunks
+    page: int              # pool page; rows [0, len(tokens)) are valid
+    last_access: int
+
+
+class _Node:
+    __slots__ = ("edge", "pages", "children", "tails", "parent",
+                 "last_access")
+
+    def __init__(self, edge, pages, parent, clock=0):
+        self.edge: list[tuple] = edge      # full page_size-token chunks
+        self.pages: list[int] = pages      # one pool page per chunk
+        self.children: dict[tuple, _Node] = {}
+        self.tails: list[_Tail] = []
+        self.parent: _Node | None = parent
+        self.last_access = clock
+
+
+class PrefixCache:
+    """Host-side radix tree mapping token prefixes to pool pages."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        self.page_size = pool.page_size
+        self.root = _Node([], [], None)
+        self._clock = 0
+
+    # ------------------------------------------------------------- lookup
+    def reclaimable(self) -> int:
+        """Pages eviction could free right now. Every cached-idle page
+        is reachable: lanes retain root-path prefixes, so an idle page's
+        whole subtree is idle and leaf-first eviction cascades to it."""
+        return self.pool.cached_idle
+
+    def match(self, tokens: np.ndarray) -> Match:
+        """Longest cached prefix of ``tokens``, capped at
+        ``len(tokens) - 1`` so the tail prefill always runs at least one
+        token (the engine needs last-token logits to start decoding).
+        Pure lookup apart from the LRU touch — the caller pins the
+        result with ``pool.retain`` (including ``tail_page``, which
+        must survive until its CoW copy lands) before anything can
+        evict it; hit/miss accounting lives in the engine's stats."""
+        self._clock += 1
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        cap = len(toks) - 1
+        ps = self.page_size
+
+        def common(cached_toks):
+            t = 0
+            for a, b in zip(cached_toks, toks[depth:cap]):
+                if a != b:
+                    break
+                t += 1
+            return t
+
+        pages: list[int] = []
+        node = self.root
+        depth = 0
+        tail_page, tail_matched = None, 0
+        while depth + ps <= cap:
+            child = node.children.get(tuple(toks[depth:depth + ps]))
+            if child is None:
+                break
+            child.last_access = self._clock
+            i = 0
+            while (i < len(child.edge) and depth + ps <= cap
+                   and tuple(toks[depth:depth + ps]) == child.edge[i]):
+                pages.append(child.pages[i])
+                depth += ps
+                i += 1
+            if i < len(child.edge):
+                # stopped INSIDE the edge (cap or divergence mid-page):
+                # the next cached page is fully valid but only its first
+                # rows continue this prompt — a CoW boundary page, same
+                # as a tail
+                t = common(child.edge[i])
+                if t:
+                    tail_page, tail_matched = child.pages[i], t
+                return Match(pages, depth + tail_matched, tail_page,
+                             tail_matched)
+            node = child
+        # at a node boundary: the best partial continuation among the
+        # node's tails and its children's FIRST pages (an exact-chunk
+        # child was already consumed by the walk above)
+        best = None
+        for tail in node.tails:
+            t = common(tail.tokens)
+            if t > tail_matched:
+                tail_matched, tail_page, best = t, tail.page, tail
+        for child in node.children.values():
+            t = common(child.edge[0])
+            if t > tail_matched:
+                tail_matched, tail_page, best = t, child.pages[0], child
+        if best is not None:
+            best.last_access = self._clock
+        matched = depth + tail_matched
+        return Match(pages, matched, tail_page, tail_matched)
+
+    # ------------------------------------------------------------- insert
+    def insert(self, tokens: np.ndarray, pages: list[int]) -> int:
+        """Insert a finished sequence's KV coverage into the tree.
+
+        ``tokens`` are the ``frontier`` tokens whose K/V the lane
+        actually wrote (prompt + emitted continuation — a future prompt
+        extending this request's whole output still hits);``pages`` are
+        the lane's pages covering them in logical order
+        (``ceil(len(tokens) / page_size)`` entries, shared pages
+        included). Pages backing chunks the tree does not yet hold are
+        DONATED (``cache_add``) — the caller releases its references
+        afterwards as usual and donated pages park as cached-idle.
+        Duplicated coverage (another identical request finished first)
+        is not donated; the lane's copy simply frees. Returns the number
+        of donated pages."""
+        self._clock += 1
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        ps = self.page_size
+        chunks = [tuple(toks[j * ps:(j + 1) * ps])
+                  for j in range(len(toks) // ps)]
+        assert len(pages) >= -(-len(toks) // ps), "pages don't cover tokens"
+        node, i, donated = self.root, 0, 0
+        node.last_access = self._clock
+        while i < len(chunks):
+            child = node.children.get(chunks[i])
+            if child is None:
+                donate = list(pages[i:len(chunks)])
+                self.pool.cache_add(donate)
+                donated += len(donate)
+                leaf = _Node(list(chunks[i:]), donate, node, self._clock)
+                node.children[chunks[i]] = leaf
+                node = leaf
+                i = len(chunks)
+                break
+            child.last_access = self._clock
+            k = 0
+            while (k < len(child.edge) and i + k < len(chunks)
+                   and child.edge[k] == chunks[i + k]):
+                k += 1
+            if k < len(child.edge):
+                # split at the page boundary after k matched chunks
+                # (k >= 1 — the child is keyed by its first chunk); the
+                # upper half keeps its children/tails, pages move with
+                # their chunks
+                mid = _Node(child.edge[:k], child.pages[:k], node,
+                            self._clock)
+                mid.children[child.edge[k]] = child
+                child.edge = child.edge[k:]
+                child.pages = child.pages[k:]
+                child.parent = mid
+                node.children[mid.edge[0]] = mid
+                node = mid
+            else:
+                node = child
+            i += k
+        rest = tuple(toks[len(chunks) * ps:])
+        if rest:
+            t = len(rest)
+            covered = any(tail.tokens[:t] == rest for tail in node.tails)
+            if not covered:
+                page = pages[len(chunks)]
+                self.pool.cache_add([page])
+                donated += 1
+                node.tails.append(_Tail(rest, page, self._clock))
+        return donated
+
+    # ------------------------------------------------------------ eviction
+    def evict(self, need: int) -> int:
+        """Free at least ``need`` pages by dropping cold cache entries,
+        LRU-first: unreferenced tails, then unreferenced suffixes of
+        leaf edges (an emptied leaf detaches and may expose its parent).
+        Pages some lane still reads (``refcount > 0``) are untouchable.
+        Returns how many pages were actually freed (< ``need`` when the
+        cache runs out of idle entries)."""
+        freed = 0
+        progress = True
+        while freed < need and progress:
+            # ONE DFS collects every current candidate; they are then
+            # dropped in LRU order. The outer loop re-scans only when a
+            # detached leaf may have exposed its parent as a new leaf
+            # (cascading reclaim) and more pages are still needed.
+            progress = False
+            cands: list[tuple[int, int, _Node, _Tail | None]] = []
+            stack = [self.root]
+            while stack:
+                nd = stack.pop()
+                stack.extend(nd.children.values())
+                for tail in nd.tails:
+                    if self.pool.refcount(tail.page) == 0:
+                        cands.append((tail.last_access, 1, nd, tail))
+                if (nd.parent is not None and not nd.children
+                        and not nd.tails
+                        and self.pool.refcount(nd.pages[-1]) == 0):
+                    cands.append((nd.last_access, 0, nd, None))
+            for _, kind, nd, tail in sorted(cands, key=lambda c: c[:2]):
+                if freed >= need:
+                    break
+                if kind == 1:
+                    # a tail drop above may have turned this node into a
+                    # bare leaf candidate already handled; tails
+                    # themselves never invalidate each other
+                    nd.tails.remove(tail)
+                    self.pool.cache_drop([tail.page])
+                    freed += 1
+                    progress = True
+                    continue
+                key = nd.edge[0]
+                while (nd.edge and freed < need
+                       and self.pool.refcount(nd.pages[-1]) == 0):
+                    nd.edge.pop()
+                    self.pool.cache_drop([nd.pages.pop()])
+                    freed += 1
+                    progress = True
+                if not nd.edge:
+                    del nd.parent.children[key]
+                    nd.parent = None
+        return freed
+
+    # ---------------------------------------------------------- inspection
+    def __len__(self) -> int:
+        """Cached pages currently held by the tree."""
+        n = 0
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            n += len(nd.pages) + len(nd.tails)
+        return n

@@ -18,6 +18,7 @@ number of free lanes.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Iterable
 
@@ -33,6 +34,7 @@ class Request:
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        self.queued_at = time.monotonic()   # for queued-time observability
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
@@ -55,6 +57,13 @@ class FIFOScheduler:
         self.max_batch = max_batch
         self.max_len = max_len
         self._queue: deque[Request] = deque()
+        self.reset_stats()
+
+    def reset_stats(self):
+        # page-gate admission rejections: times the FIFO head had a free
+        # lane but the pool (free + reclaimable-cached) couldn't cover
+        # the group's effective page cost (engine.reset_stats resets)
+        self.rejections = 0
 
     def __len__(self) -> int:
         return len(self._queue)
@@ -76,18 +85,30 @@ class FIFOScheduler:
         maps a tentative admission group -> total pages it would pin
         (the group is prefilled right-aligned, so adding a long prompt
         widens every member's pad region — the cost must be recomputed
-        for the whole group, not summed per request). The prefix stops
-        at the first request whose inclusion would overdraw
-        ``free_pages`` — strict FIFO, head-of-line blocking by design
-        (the head is admitted as soon as enough pages free up)."""
+        for the whole group, not summed per request; with the prefix
+        cache the engine's cost is the EFFECTIVE one — pages already
+        shared from the radix tree cost nothing, and ``free_pages`` is
+        free + reclaimable-cached). The prefix stops at the first
+        request whose inclusion would overdraw ``free_pages`` — strict
+        FIFO, head-of-line blocking by design (the head is admitted as
+        soon as enough pages free up). A page-gated stop with lanes
+        still free counts as an admission rejection (``rejections``)."""
         out: list[Request] = []
         while self._queue and len(out) < n_free:
             if page_cost is not None:
                 trial = out + [self._queue[0]]
                 if page_cost(trial) > free_pages:
+                    self.rejections += 1
                     break
             out.append(self._queue.popleft())
         return out
+
+    def push_front(self, reqs: list[Request]) -> None:
+        """Return admitted-but-not-started requests to the queue HEAD in
+        their original order (the engine un-admits when a re-checked
+        prefix match no longer fits after a concurrent eviction)."""
+        for r in reversed(reqs):
+            self._queue.appendleft(r)
 
     def extend(self, reqs: Iterable[Request]):
         for r in reqs:

@@ -165,6 +165,24 @@ def make_paged_decode_slab_step(cfg, k_steps: int, max_len: int,
     return slab
 
 
+def make_copy_pages_step():
+    """Jittable copy-on-write page copy over the paged pool
+    (engine.py + serving/prefix_cache.py): duplicate pool pages ``src``
+    into ``dst`` across every layer, K and V, in one fused scatter per
+    array. The whole page is copied — the rows past the shared boundary
+    are stale garbage the causal mask hides until the lane overwrites
+    them, exactly like a recycled free page.
+
+    copy(cache, src (n,) int32, dst (n,) int32) -> new_cache
+    """
+    def copy_pages(cache, src, dst):
+        out = dict(cache)
+        for name in ("k", "v"):
+            out[name] = cache[name].at[:, dst].set(cache[name][:, src])
+        return out
+    return copy_pages
+
+
 def make_decode_step(cfg, dist=None, temperature: float = 0.0):
     def decode_step(params, cache, tokens, pos, rng):
         logits, cache = registry.decode_step(cfg, params, cache, tokens,

@@ -1,0 +1,129 @@
+"""Property tests for the refcounted page allocator (serving/pages.py):
+random alloc / retain / release / cache_add / cache_drop interleavings
+against a shadow model. Invariants, after EVERY operation:
+
+  * ``free + referenced + cached_idle == n_pages`` (no page is ever in
+    two states, none is lost);
+  * allocation never exceeds ``n_pages`` and over-allocation raises
+    instead of handing out phantom pages;
+  * ``peak_in_use`` / ``peak_referenced`` are monotone running maxima
+    of occupancy / lane-pinned pages;
+  * invalid transitions (double free, retain/cache_add of a free page,
+    cache_drop of a referenced page) raise and leave state unchanged.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+fallback sampler (tests/_hypo.py).
+"""
+import numpy as np
+import pytest
+
+from _hypo import given, settings, strategies as st
+from repro.serving.pages import PagePool
+
+
+def _model_counts(rc, cached):
+    ref = sum(1 for r in rc if r > 0)
+    ci = sum(1 for p, r in enumerate(rc) if r == 0 and cached[p])
+    return ref, ci
+
+
+@settings(max_examples=30)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       n_pages=st.integers(min_value=1, max_value=12),
+       n_ops=st.integers(min_value=5, max_value=60))
+def test_random_walk_preserves_page_accounting(seed, n_pages, n_ops):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(n_pages, page_size=4)
+    # shadow model
+    rc = [0] * n_pages
+    cached = [False] * n_pages
+    peak_occ = peak_ref = 0
+
+    for _ in range(n_ops):
+        op = rng.choice(["alloc", "retain", "release", "cache_add",
+                         "cache_drop", "overalloc"])
+        owned = [p for p in range(n_pages) if rc[p] > 0]
+        idle_cached = [p for p in range(n_pages)
+                       if rc[p] == 0 and cached[p]]
+        if op == "alloc":
+            n = int(rng.integers(0, pool.free_pages + 1))
+            got = pool.alloc(n)
+            assert len(got) == len(set(got)) == n
+            for p in got:
+                assert rc[p] == 0 and not cached[p]
+                rc[p] = 1
+        elif op == "overalloc":
+            want = pool.free_pages + 1
+            with pytest.raises(RuntimeError, match="exhausted"):
+                pool.alloc(want)
+        elif op == "retain":
+            pick = owned + idle_cached
+            if not pick:
+                continue
+            p = int(rng.choice(pick))
+            pool.retain([p])
+            rc[p] += 1
+        elif op == "release":
+            if not owned:
+                # double free must raise and change nothing
+                free_p = int(rng.integers(0, n_pages))
+                with pytest.raises(RuntimeError, match="double free"):
+                    pool.release([free_p])
+                continue
+            p = int(rng.choice(owned))
+            pool.release([p])
+            rc[p] -= 1
+        elif op == "cache_add":
+            if not owned:
+                continue
+            p = int(rng.choice(owned))
+            pool.cache_add([p])
+            cached[p] = True
+        elif op == "cache_drop":
+            if idle_cached and rng.integers(2):
+                p = int(rng.choice(idle_cached))
+                pool.cache_drop([p])
+                cached[p] = False
+            elif owned and cached[(p := int(rng.choice(owned)))]:
+                with pytest.raises(RuntimeError,
+                                   match="still referenced"):
+                    pool.cache_drop([p])
+                continue
+            else:
+                continue
+
+        # ---- invariants against the shadow model, every step
+        ref, ci = _model_counts(rc, cached)
+        occ = ref + ci
+        peak_occ = max(peak_occ, occ)
+        peak_ref = max(peak_ref, ref)
+        assert pool.referenced == ref
+        assert pool.cached_idle == ci
+        assert pool.free_pages == n_pages - occ
+        assert pool.free_pages + pool.referenced + pool.cached_idle \
+            == n_pages
+        assert pool.in_use == occ <= n_pages
+        assert pool.peak_in_use == peak_occ      # monotone-correct
+        assert pool.peak_referenced == peak_ref
+
+
+@settings(max_examples=15)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_alloc_release_roundtrip_restores_full_pool(seed):
+    rng = np.random.default_rng(seed)
+    pool = PagePool(8, 4)
+    held: list[int] = []
+    for _ in range(20):
+        if pool.free_pages and rng.integers(2):
+            held.extend(pool.alloc(int(rng.integers(
+                1, pool.free_pages + 1))))
+        elif held:
+            k = int(rng.integers(1, len(held) + 1))
+            drop, held = held[:k], held[k:]
+            pool.release(drop)
+    if held:
+        pool.release(held)
+    assert pool.free_pages == pool.n_pages
+    assert pool.referenced == 0 and pool.cached_idle == 0
+    # every page is handed out exactly once when fully drained
+    assert sorted(pool.alloc(8)) == list(range(8))
