@@ -37,6 +37,10 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="share prompt-prefix KV pages across requests "
                          "through the radix-tree prefix cache")
+    ap.add_argument("--mixed", action="store_true",
+                    help="stall-free mixed batching: fuse chunked "
+                         "prefill into the decode step under the "
+                         "prefill token budget")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -65,7 +69,8 @@ def main():
                                    max_new_tokens=args.new_tokens,
                                    max_batch=args.max_batch or args.batch,
                                    slab_k=args.slab_k,
-                                   prefix_cache=args.prefix_cache)
+                                   prefix_cache=args.prefix_cache,
+                                   mixed=args.mixed)
     else:
         prompts = jnp.asarray(rng.integers(
             0, cfg.vocab_size, (args.batch, 8)), jnp.int32)

@@ -21,6 +21,18 @@ identically.
 Validated in interpret mode against the XLA gather path
 (tests/test_paged_kv.py); the engine picks it via
 ``attn_backend='pallas'``.
+
+Mixed read-page buckets per lane: the grid reads the SAME ``R`` pages
+for every lane even when frontiers differ wildly (the engine buckets
+``R`` to the batch max). A lane whose live context is shorter than
+``R`` pages has block-table entries past its allocation pointing at
+pool page 0 — a page that may belong to another lane — so tolerating
+mixed buckets means those reads must contribute NOTHING: the bias row
+marks every slot past the lane's frontier NEG_INF (causal mask), the
+``valid`` guard zeroes their probabilities before the accumulator sees
+them, and a fully-masked page leaves m/l/acc untouched. Verified by
+tests/test_paged_kv.py::test_kernel_tolerates_mixed_read_buckets
+(one-page lane next to a many-page lane under one shared bucket).
 """
 from __future__ import annotations
 

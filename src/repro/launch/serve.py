@@ -48,6 +48,14 @@ def main():
     ap.add_argument("--n-pages", type=int, default=0,
                     help="KV pool pages (default: contiguous-equivalent "
                          "max_batch * ceil(max_len / page_size))")
+    ap.add_argument("--mixed", action="store_true",
+                    help="stall-free mixed batching: fuse chunked "
+                         "prefill into the decode step under a token "
+                         "budget (decode never stalls for admission)")
+    ap.add_argument("--prefill-token-budget", type=int, default=0,
+                    help="tokens one mixed step may spend (decode "
+                         "first, remainder to prefill chunks; 0 = "
+                         "engine default max_batch + prefill_chunk)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="radix-tree prefix cache: share prompt-prefix "
                          "KV pages across requests (refcounted, "
@@ -109,14 +117,20 @@ def main():
         max_batch=args.max_batch or args.batch,
         prefill_chunk=args.prefill_chunk, slab_k=args.slab_k,
         paged=not args.contiguous, page_size=args.page_size,
-        n_pages=args.n_pages or None, prefix_cache=args.prefix_cache)
+        n_pages=args.n_pages or None, prefix_cache=args.prefix_cache,
+        mixed=args.mixed,
+        prefill_token_budget=args.prefill_token_budget or None)
     print(f"generated {len(toks)} seqs — {stats['tok_per_s']:.1f} tok/s "
           f"({stats['decode_slabs']} slabs of {args.slab_k}, "
           f"{stats['prefill_chunks']} prefill chunks, "
-          f"peak_kv_kib={stats['peak_kv_bytes'] / 1024:.1f})"
+          f"peak_kv_kib={stats['peak_kv_bytes'] / 1024:.1f}, "
+          f"ttft_p95_ms={stats['ttft_p95_s'] * 1e3:.1f})"
           + (f" prefix_hit_rate={stats['prefix_hit_rate']:.2f} "
              f"skipped={stats['prefill_tokens_skipped']}"
-             if args.prefix_cache else ""))
+             if args.prefix_cache else "")
+          + (f" mixed_steps={stats['mixed_steps']} "
+             f"stalled={stats['stalled_decode_steps']}"
+             if args.mixed else ""))
     for p, t in list(zip(prompts, toks))[:2]:
         print(t[p.size:])
 

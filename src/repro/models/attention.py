@@ -308,7 +308,11 @@ def paged_write(pool: jax.Array, block_tables: jax.Array,
     slots.shape + (KV, hd). Slots past the table end (>= max_pages*ps —
     the engine parks finished lanes there) and lanes masked out by
     ``lane_mask`` are DROPPED, never clamped: a clamp would alias the
-    write onto pool page 0, which may belong to another lane."""
+    write onto pool page 0, which may belong to another lane.
+    ``lane_mask`` is (B,) bool (whole lanes) or (B, C) bool (per-token:
+    the mixed decode+prefill step pads every lane's query run to a
+    common width — pad tokens must not scribble through the block
+    table, whose rows beyond a lane's allocation point at page 0)."""
     n_pages, ps = pool.shape[0], pool.shape[1]
     max_pages = block_tables.shape[1]
     slots = slots.astype(jnp.int32)
@@ -317,7 +321,7 @@ def paged_write(pool: jax.Array, block_tables: jax.Array,
     page = s2 // ps
     ok = page < max_pages
     if lane_mask is not None:
-        ok &= lane_mask[:, None]
+        ok &= (lane_mask[:, None] if lane_mask.ndim == 1 else lane_mask)
     phys = jnp.take_along_axis(block_tables,
                                jnp.minimum(page, max_pages - 1), axis=1)
     phys = jnp.where(ok, phys, jnp.int32(n_pages))       # OOB -> drop
@@ -377,26 +381,47 @@ def paged_decode_attention(cfg, p, x, pool_k, pool_v, block_tables, pos,
 
 def paged_chunk_attention(cfg, p, x, pool_k, pool_v, block_tables, slot,
                           offsets, *, read_pages: int, window=0,
-                          lane_mask=None):
+                          lane_mask=None, q_lens=None):
     """Batched chunked-prefill attention over the paged pool: C prompt
     tokens written at logical slots [slot, slot+C) through each lane's
     block table (the engine allocates the covering pages before the
     first chunk). ``lane_mask`` shields running lanes the natural paged
     way — their writes are dropped, their pages never touched (the
     dense path had to read-modify-write them back).
+
+    ``slot`` may be a scalar (every lane writes the same slot range —
+    group prefill) or a (B,) vector of PER-LANE start slots; with
+    ``q_lens`` (B,) the query run is additionally RAGGED per lane: lane
+    b's tokens [0, q_lens[b]) are real (written + attended from its own
+    positions), the rest of the width-C row is padding whose writes are
+    dropped and whose outputs the caller discards. This is the mixed
+    decode+prefill core: decode lanes ride along at q_len == 1 (start =
+    their frontier) while admitting lanes prefill a chunk, all in ONE
+    call — per-query attention math is position-row independent, so
+    each lane's rows come out bitwise-identical to the phased paths.
     Returns (out (B,C,D), new_pool_k, new_pool_v)."""
     b, c, _ = x.shape
     ps = pool_k.shape[1]
-    slots = jnp.int32(slot) + jnp.arange(c, dtype=jnp.int32)
-    slots_b = jnp.broadcast_to(slots[None, :], (b, c))
-    qpos = slots[None, :] - offsets.astype(jnp.int32)[:, None]   # (B,C)
+    slot = jnp.asarray(slot, jnp.int32)
+    steps = jnp.arange(c, dtype=jnp.int32)
+    if slot.ndim == 0:
+        slots_b = jnp.broadcast_to((slot + steps)[None, :], (b, c))
+    else:
+        slots_b = slot[:, None] + steps[None, :]             # (B, C)
+    qpos = slots_b - offsets.astype(jnp.int32)[:, None]      # (B, C)
     q, k, v = _project_qkv(cfg, p, x)
     if cfg.rope_theta > 0:
         rp = jnp.maximum(qpos, 0)
         q = apply_rope(q, rp, cfg.rope_theta)
         k = apply_rope(k, rp, cfg.rope_theta)
-    pool_k = paged_write(pool_k, block_tables, slots_b, k, lane_mask)
-    pool_v = paged_write(pool_v, block_tables, slots_b, v, lane_mask)
+    wmask = None if lane_mask is None else lane_mask
+    if q_lens is not None:
+        valid = steps[None, :] < q_lens.astype(jnp.int32)[:, None]
+        wmask = valid if wmask is None else (wmask[:, None] & valid
+                                             if wmask.ndim == 1
+                                             else wmask & valid)
+    pool_k = paged_write(pool_k, block_tables, slots_b, k, wmask)
+    pool_v = paged_write(pool_v, block_tables, slots_b, v, wmask)
     kpos = _cache_positions(read_pages * ps, offsets)
     gk = gather_pages(pool_k, block_tables, read_pages)
     gv = gather_pages(pool_v, block_tables, read_pages)

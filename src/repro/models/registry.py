@@ -71,6 +71,13 @@ def supports_paged(cfg) -> bool:
     return hasattr(module_for(cfg), "paged_decode_step")
 
 
+def supports_mixed(cfg) -> bool:
+    """Mixed decode+prefill batches: ``paged_prefill_chunk`` accepting
+    per-lane start slots + ``q_lens`` (transformer families — the mixed
+    step rides on the paged chunk path, so paged support implies it)."""
+    return supports_paged(cfg)
+
+
 def init_paged_cache(cfg, n_pages, page_size, **kw):
     """Shared paged KV pool (layers, n_pages, page_size, KV, hd); see
     transformer.init_paged_cache."""

@@ -401,18 +401,25 @@ def prefill_chunk(cfg, params, cache, tokens, slot, offsets, *,
 
 def paged_prefill_chunk(cfg, params, cache, tokens, slot, offsets,
                         block_tables, *, read_pages: int, masks=None,
-                        dist=None, lane_mask=None):
+                        dist=None, lane_mask=None, q_lens=None):
     """Chunked prefill over the PAGED pool: the chunk's K/V lands at
     logical slots [slot, slot+C) through each lane's block table (pages
     pre-allocated by the engine); attention reads each lane's first
     ``read_pages`` pages (STATIC — must cover slot+C).
+
+    ``slot`` may also be a (B,) vector of per-lane start slots and
+    ``q_lens`` a (B,) per-lane query-run length — the MIXED batch shape
+    (serving/step.py make_mixed_step): decode lanes contribute one
+    token (q_len 1 at their frontier) while admitting lanes contribute
+    a prefill chunk, through one pass of the same ``_run_stack`` core.
     Returns (logits (B,C,V) f32, new_cache)."""
     x = embed_inputs(cfg, params, tokens)
 
     def attn_fn(p_a, h, ck, cv, window):
         return attn.paged_chunk_attention(
             cfg, p_a, h, ck, cv, block_tables, slot, offsets,
-            read_pages=read_pages, window=window, lane_mask=lane_mask)
+            read_pages=read_pages, window=window, lane_mask=lane_mask,
+            q_lens=q_lens)
 
     x, new_cache = _run_stack(cfg, params, cache, x, masks, dist, attn_fn)
     return logits_from_hidden(cfg, params, x), new_cache

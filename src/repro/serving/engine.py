@@ -51,6 +51,23 @@ the accelerator saturated across ragged, continuously-arriving requests:
     FIFO, head-of-line blocking by design). Pages for a request's whole
     extent (group width + decode budget, capped at ``max_len``) are
     pinned at admission, so a slab can never run out of pages mid-slab;
+  * **mixed batching** (``mixed=True``, paged only) — the phased loop
+    above still STALLS decode during admission: ``_admit`` runs a
+    blocking chunked-prefill loop, during which every running lane
+    waits. The mixed engine fuses the two into one token-budgeted
+    jitted step (serving/step.py ``make_mixed_step``): running lanes
+    contribute ONE decode token each and admitting lanes contribute a
+    prefill chunk, as per-lane variable-length query runs through the
+    same transformer stack — decode throughput is never zeroed by an
+    arriving prompt, and the tails of several prefix-cached admissions
+    coalesce into one call. The scheduler becomes token-budgeted
+    (``prefill_token_budget``): decode tokens are spent first, the
+    remainder is split chunk-granularly across admitting prompts, so a
+    long prompt is prefilled incrementally instead of monopolizing a
+    step. When no prompt is in flight the engine drops back to decode
+    slabs (one host sync per ``slab_k`` tokens). Greedy tokens are
+    bitwise-identical to the phased engine and the oracle — the phased
+    path (``mixed=False``, the default) is the parity baseline;
   * **prefix cache** (``prefix_cache=True``, paged only) — a host-side
     radix tree over token IDs (serving/prefix_cache.py) shares pool
     pages across requests: at admission the prompt's longest cached
@@ -85,6 +102,7 @@ from repro.serving.prefix_cache import Match, PrefixCache
 from repro.serving.scheduler import FIFOScheduler, Request
 from repro.serving.step import (make_copy_pages_step,
                                 make_decode_slab_step,
+                                make_mixed_step,
                                 make_paged_decode_slab_step,
                                 make_paged_prefill_chunk_step,
                                 make_prefill_chunk_step)
@@ -97,6 +115,7 @@ class GenResult:
     prompt: np.ndarray
     generated: np.ndarray
     truncated: bool = False    # hit the lane's slot cap before budget
+    ttft_s: float = 0.0        # submit -> first token (monotonic clock)
 
     @property
     def tokens(self) -> np.ndarray:
@@ -109,6 +128,9 @@ class _Lane:
     offset: int                # left-pad: group width - plen
     generated: list[int]
     pages: list[int] = dataclasses.field(default_factory=list)
+    # host-sync timestamp of each generated token (TTFT / inter-token
+    # latency observability; tokens folded at one sync share it)
+    token_times: list[float] = dataclasses.field(default_factory=list)
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -144,6 +166,17 @@ class Engine:
     may write it, and finished sequences are re-inserted for future
     hits (LRU-evicted under pool pressure). Greedy tokens are
     bitwise-identical with sharing on or off.
+
+    ``mixed=True`` (paged only) fuses chunked prefill INTO the decode
+    step under a token budget (``prefill_token_budget``, default
+    ``max_batch + prefill_chunk``: a full decode batch plus one full
+    chunk per step): admission never stalls running lanes
+    (``stats["stalled_decode_steps"] == 0``), prompts are admitted
+    chunk-granularly, and requests are admitted per-lane at
+    ``offset == 0`` (no group right-alignment — per-lane query runs
+    make the padding pointless, and a lane keeps its full ``max_len``
+    headroom). ``mixed=False`` keeps the phased admit-then-decode loop
+    as the parity oracle.
     """
 
     def __init__(self, cfg, params, *, max_batch: int, max_len: int,
@@ -152,7 +185,8 @@ class Engine:
                  scheduler: FIFOScheduler | None = None,
                  paged: bool = True, page_size: int = 16,
                  n_pages: int | None = None, attn_backend: str = "xla",
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, mixed: bool = False,
+                 prefill_token_budget: int | None = None):
         if not registry.supports_prefill_chunk(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} is not KV-cache servable by the "
@@ -164,6 +198,14 @@ class Engine:
         if prefix_cache and not paged:
             raise ValueError("prefix_cache=True requires paged=True "
                              "(pages are the unit of sharing)")
+        if mixed and not paged:
+            raise ValueError("mixed=True requires paged=True (the mixed "
+                             "step writes per-lane query runs through "
+                             "block tables)")
+        if mixed and not registry.supports_mixed(cfg):
+            raise NotImplementedError(
+                f"family {cfg.family!r} has no mixed decode+prefill "
+                "step; pass mixed=False")
         assert slab_k >= 1
         self.cfg = cfg
         self.params = params
@@ -173,7 +215,19 @@ class Engine:
         self.slab_k = slab_k
         self.eos_id = eos_id
         self.paged = paged
-        self.scheduler = scheduler or FIFOScheduler(max_batch, max_len)
+        self.mixed = mixed
+        self.scheduler = scheduler or FIFOScheduler(
+            max_batch, max_len, prefill_token_budget=prefill_token_budget)
+        if prefill_token_budget is not None:
+            self.scheduler.prefill_token_budget = prefill_token_budget
+        elif getattr(self.scheduler, "prefill_token_budget", None) is None:
+            # one full decode batch + one full prefill chunk per step
+            self.scheduler.prefill_token_budget = max_batch + self.chunk
+        # lanes whose prompt is still being (chunk-)prefilled across
+        # steps: lane -> next prompt position (admission order — the
+        # token-budget planner hands chunks out FIFO). Mixed mode only;
+        # the phased engine drains tails inside admission.
+        self._prefilling: dict[int, int] = {}
         self.lanes: list[_Lane | None] = [None] * max_batch
         # host mirror of the on-device per-lane state; uploaded to the
         # device ONLY when admission/eviction edits it (self._dirty)
@@ -202,6 +256,12 @@ class Engine:
             self._prefill = jax.jit(
                 make_paged_prefill_chunk_step(cfg, dist=dist),
                 static_argnames=("read_pages",))
+            # one fused decode+prefill call (mixed engine steps AND the
+            # phased engine's batched cross-request tail prefill)
+            self._mixed_fn = jax.jit(make_mixed_step(cfg, dist=dist),
+                                     static_argnames=("read_pages",))
+            # query-width bucket cap: smallest power of two >= chunk
+            self._wcap = 1 << max(0, (self.chunk - 1).bit_length())
             self._slab = jax.jit(
                 make_paged_decode_slab_step(
                     cfg, slab_k, max_len, page_size, eos_id=eos_id,
@@ -219,11 +279,22 @@ class Engine:
         self.reset_stats()
 
     def reset_stats(self):
+        # per-request latency samples (monotonic clock): TTFT and
+        # inter-token gaps, folded into p50/p95 by finalize_stats
+        self._ttft: list[float] = []
+        self._itl: list[float] = []
         self.stats = {"prefill_chunks": 0, "prefill_tokens": 0,
                       "decode_slabs": 0, "decode_steps": 0,
                       "decode_tokens": 0, "generated_tokens": 0,
                       "prefill_s": 0.0, "decode_s": 0.0, "admitted": 0,
                       "evicted": 0, "truncated": 0,
+                      # mixed batching: fused decode+prefill calls, the
+                      # time spent in them, and the stall counter — a
+                      # stalled decode step is one blocking prefill
+                      # call that ran while live decode lanes waited
+                      # (phased admission; structurally 0 when mixed)
+                      "mixed_steps": 0, "mixed_s": 0.0,
+                      "stalled_decode_steps": 0,
                       # paged attention read accounting (page units):
                       # what the block-table gather touched vs what a
                       # dense max_len read would have
@@ -404,8 +475,13 @@ class Engine:
         self._dirty = True
         self.stats["evicted"] += 1
         self.stats["truncated"] += int(truncated)
+        tt = lane.token_times
+        ttft = max(0.0, tt[0] - lane.req.queued_at) if tt else 0.0
+        self._ttft.append(ttft)
+        self._itl.extend(b - a for a, b in zip(tt, tt[1:]))
         return GenResult(lane.req.uid, lane.req.prompt,
-                         np.asarray(lane.generated, np.int32), truncated)
+                         np.asarray(lane.generated, np.int32), truncated,
+                         ttft_s=ttft)
 
     # ----------------------------------------------------------- admission
     def _note_admitted(self, reqs: list[Request]) -> None:
@@ -420,6 +496,9 @@ class Engine:
         free = [i for i, l in enumerate(self.lanes) if l is None]
         if self.pcache is not None:
             self._admit_shared(free)
+            return
+        if self.mixed:
+            self._admit_mixed(free)
             return
         if self.paged:
             reqs = self.scheduler.admit(len(free), self.pool.free_pages,
@@ -489,7 +568,13 @@ class Engine:
         span = width - start
         rem = span % self.chunk
         sizes = ([rem] if rem else []) + [self.chunk] * (span // self.chunk)
-        t0 = time.time()
+        # phased-stall accounting: every one of these blocking calls
+        # runs while the OTHER live lanes' decode waits
+        stalled = any(bool(self._mirror["live"][j])
+                      for j in self.active_lanes if not lane_mask[j])
+        if stalled:
+            self.stats["stalled_decode_steps"] += len(sizes)
+        t0 = time.monotonic()
         for c in sizes:
             if self.paged:
                 last, self.cache = self._prefill(
@@ -507,35 +592,76 @@ class Engine:
             pos += c
             self.stats["prefill_chunks"] += 1
         first = np.asarray(jax.block_until_ready(jnp.argmax(last, -1)))
-        self.stats["prefill_s"] += time.time() - t0
+        now = time.monotonic()
+        self.stats["prefill_s"] += now - t0
         for i in lane_ids:
             self._mirror["pending"][i] = int(first[i])
             self.lanes[i].generated.append(int(first[i]))
+            self.lanes[i].token_times.append(now)
             self.stats["generated_tokens"] += 1
+
+    # ------------------------------------------------- mixed admission
+    def _admit_mixed(self, free: list[int]) -> None:
+        """Chunk-granular admission (``mixed=True``, no prefix cache):
+        each admitted request takes a lane at ``offset == 0`` (per-lane
+        query runs need no group right-alignment, and the lane keeps
+        its full ``max_len`` headroom), pins pages for its own extent,
+        and registers as a PREFILLING lane — its prompt is fed to the
+        fused mixed step chunk-by-chunk under the token budget instead
+        of a blocking prefill loop here."""
+        reqs = self.scheduler.admit(
+            len(free), self.pool.free_pages,
+            lambda group: sum(self._page_cost([r]) for r in group))
+        m = self._mirror
+        for r in reqs:
+            i = free.pop(0)
+            need = self._page_cost([r])
+            self.lanes[i] = _Lane(r, 0, [], pages=self.pool.alloc(need))
+            m["bt"][i] = 0
+            m["bt"][i, :need] = self.lanes[i].pages
+            m["offsets"][i] = 0
+            m["frontier"][i] = r.prompt_len
+            m["remaining"][i] = r.max_new_tokens - 1
+            m["pending"][i] = 0
+            m["live"][i] = False          # decodable once the tail lands
+            self._prefilling[i] = 0
+            self.stats["prompt_tokens"] += r.prompt_len
+        if reqs:
+            self._dirty = True
+            self._note_admitted(reqs)
 
     # ------------------------------------------- prefix-cached admission
     def _admit_shared(self, free: list[int]) -> None:
         """Admission with the radix-tree prefix cache: the scheduler
         gate sees the EFFECTIVE page cost (shared pages are free,
         capacity is free + reclaimable-cached), and each admitted
-        request is prefilled as its own width-``prompt_len`` group at
-        ``offset == 0`` — sharing is positional, so every lane's cache
-        slot must equal its logical position. A request whose re-checked
-        match no longer covers what the gate assumed (a concurrent
-        eviction inside this batch) is returned to the queue HEAD."""
+        request takes its own lane at ``offset == 0`` — sharing is
+        positional, so every lane's cache slot must equal its logical
+        position. A request whose re-checked match no longer covers
+        what the gate assumed (a concurrent eviction inside this batch)
+        is returned to the queue HEAD.
+
+        The uncovered TAILS of every request admitted in this round are
+        prefilled together: one batched cross-request loop through the
+        mixed-step call (phased) or chunk-granular fusion into the
+        decode steps (mixed) — never a per-lane chunk loop each."""
         avail = self.pool.free_pages + self.pcache.reclaimable()
         reqs = self.scheduler.admit(len(free), avail,
                                     self._page_cost_shared())
+        tails: list[int] = []
         for j, r in enumerate(reqs):
             if not self._admit_one(free[0], r):
                 self.scheduler.push_front(reqs[j:])
-                return
-            free.pop(0)
+                break
+            tails.append(free.pop(0))
             self._note_admitted([r])
+        if not self.mixed and tails:
+            self._prefill_tails(tails)
 
     def _admit_one(self, i: int, r: Request) -> bool:
         """match -> pin shared pages -> evict-for-room -> alloc own
-        pages -> CoW the boundary page -> tail prefill. Returns False
+        pages -> CoW the boundary page -> register the tail prefill
+        (``self._prefilling``; the caller batches it). Returns False
         when the pool can't cover the request — no lane/page state is
         held, but the eviction pass may already have dropped cold
         cached-idle entries (that reclaim is never undone)."""
@@ -571,25 +697,31 @@ class Engine:
         mir["frontier"][i] = r.prompt_len
         mir["remaining"][i] = r.max_new_tokens - 1
         mir["pending"][i] = 0
-        mir["live"][i] = True
+        mir["live"][i] = False        # decodable once the tail lands
+        self._prefilling[i] = m.matched_tokens
         self._dirty = True
         self.stats["prompt_tokens"] += r.prompt_len
         self.stats["prefix_hits"] += int(m.matched_tokens > 0)
         self.stats["prefix_misses"] += int(m.matched_tokens == 0)
         self.stats["prefill_tokens_skipped"] += m.matched_tokens
-        self._prefill_lane(i, r, m.matched_tokens)
         return True
 
-    def _prefill_lane(self, i: int, r: Request, matched: int) -> None:
-        """Chunk-prefill ONLY the uncovered tail ``[matched, plen)`` of
-        one lane's prompt (``matched`` slots are already backed by
-        shared — or CoW-copied — pages holding identical K/V, so the
-        logits come out bitwise-equal to a full prefill)."""
-        plen = r.prompt_len
-        tokens = np.zeros((self.max_batch, plen), np.int32)
-        tokens[i] = r.prompt
-        self._run_prefill([i], tokens, matched, plen)
-        self.stats["prefill_tokens"] += plen - matched
+    def _prefill_tails(self, lane_ids: list[int]) -> None:
+        """Batched cross-request tail prefill (phased engines): the
+        uncovered tails ``[matched, plen)`` of every lane admitted in
+        this round advance TOGETHER, one chunk each per fused call —
+        ``ceil(max_tail / chunk)`` jitted calls total instead of a
+        per-lane chunk loop each (the matched slots are already backed
+        by shared or CoW-copied pages holding identical K/V, so the
+        logits come out bitwise-equal to a full prefill). Blocking —
+        running decode lanes stall (phased semantics, counted in
+        ``stalled_decode_steps``); the mixed engine fuses these same
+        tails into its decode steps instead."""
+        while any(i in self._prefilling for i in lane_ids):
+            plan = {i: min(self.lanes[i].req.prompt_len
+                           - self._prefilling[i], self.chunk)
+                    for i in lane_ids if i in self._prefilling}
+            self._run_mixed([], plan)
 
     def _sweep_finished(self, finished: list[GenResult]) -> None:
         """Evict lanes whose budget is spent, that emitted eos (the
@@ -608,17 +740,40 @@ class Engine:
 
     # --------------------------------------------------------------- step
     def step(self) -> list[GenResult]:
-        """One engine iteration: evict, (re)admit, one decode SLAB
-        (``slab_k`` on-device steps, one host sync). Returns requests
-        finished during this step."""
+        """One engine iteration. Phased (``mixed=False``): evict,
+        (re)admit — which BLOCKS on the new prompts' whole prefill —
+        then one decode SLAB (``slab_k`` on-device steps, one host
+        sync). Mixed: evict, admit (chunk-granular, non-blocking), then
+        either ONE fused decode+prefill call (whenever the token-budget
+        planner assigned prompt chunks) or a decode slab (no prompt in
+        flight — full slab throughput between admissions). Returns
+        requests finished during this step."""
         finished: list[GenResult] = []
         self._sweep_finished(finished)
         self._admit()
         self._sweep_finished(finished)   # e.g. max_new_tokens == 1
+        if self.mixed:
+            decode_lanes = [i for i in self.active_lanes
+                            if self._mirror["live"][i]]
+            tails = [(i, self.lanes[i].req.prompt_len - pos)
+                     for i, pos in self._prefilling.items()]
+            plan = self.scheduler.plan_chunks(tails, len(decode_lanes),
+                                              self.chunk)
+            if plan:
+                self._run_mixed(decode_lanes, plan)
+            elif decode_lanes:
+                self._decode_slab()
+            return finished
         if not self.active_lanes:
             return finished
+        self._decode_slab()
+        return finished
+
+    def _decode_slab(self) -> None:
+        """One decode slab: the on-device ``lax.scan`` token loop, one
+        host sync per ``slab_k`` steps."""
         self._sync_dstate()
-        t0 = time.time()
+        t0 = time.monotonic()
         if self.paged:
             fmax = int(max(self._mirror["frontier"][i]
                            for i in self.active_lanes))
@@ -634,13 +789,107 @@ class Engine:
             block, self._dstate, self.cache = self._slab(
                 self.params, self.cache, self._dstate)
         block = np.asarray(jax.block_until_ready(block))
-        self.stats["decode_s"] += time.time() - t0
+        now = time.monotonic()
+        self.stats["decode_s"] += now - t0
         self.stats["decode_slabs"] += 1
         self.stats["decode_steps"] += self.slab_k
-        self._replay(block)
-        return finished
+        self._replay(block, now)
 
-    def _replay(self, block: np.ndarray) -> None:
+    def _run_mixed(self, decode_lanes: list[int],
+                   plan: dict[int, int]) -> None:
+        """ONE fused decode+prefill call: decode lanes contribute one
+        token each (q_len 1 at their frontier), ``plan`` lanes a prompt
+        chunk (q_len c at their prefill position), padded to a
+        power-of-two query width (jit cache stays O(log chunk)). The
+        host folds the returned per-lane next tokens: decode lanes
+        advance with EXACTLY the slab's stop logic (frontier/remaining/
+        eos — bitwise-identical greedy streams), prefill lanes advance
+        their prompt position and go live when the tail lands (their
+        argmax is the request's first generated token).
+
+        Also the phased engine's batched tail-prefill core
+        (``decode_lanes == []``): then the call time is prefill time
+        and running decode lanes are stalled by it (counted)."""
+        m = self._mirror
+        w = _pow2_bucket(max(plan.values(), default=1), self._wcap)
+        tokens = np.zeros((self.max_batch, w), np.int32)
+        starts = np.zeros(self.max_batch, np.int32)
+        q_lens = np.zeros(self.max_batch, np.int32)
+        need = 1
+        for i in decode_lanes:
+            tokens[i, 0] = m["pending"][i]
+            starts[i] = m["frontier"][i]
+            q_lens[i] = 1
+            need = max(need, int(m["frontier"][i]) + 1)
+        for i, c in plan.items():
+            pos = self._prefilling[i]
+            tokens[i, :c] = self.lanes[i].req.prompt[pos:pos + c]
+            starts[i] = pos
+            q_lens[i] = c
+            need = max(need, pos + c)
+        covered = set(decode_lanes) | set(plan)
+        if plan and any(bool(m["live"][j]) for j in self.active_lanes
+                        if j not in covered):
+            self.stats["stalled_decode_steps"] += 1
+        r = _pow2_bucket(self.pool.slots_for(need), self.max_pages)
+        t0 = time.monotonic()
+        nxt, self.cache = self._mixed_fn(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(starts), jnp.asarray(q_lens),
+            jnp.asarray(m["offsets"]), jnp.asarray(m["bt"]),
+            read_pages=r)
+        # the host only needs the token vector when somebody emits a
+        # token this call (a decode lane, or a prompt finishing its
+        # tail); mid-prompt-only calls stay ASYNC so consecutive chunk
+        # dispatches pipeline like the phased prefill loop's
+        if decode_lanes or any(self._prefilling[i] + c
+                               >= self.lanes[i].req.prompt_len
+                               for i, c in plan.items()):
+            nxt = np.asarray(jax.block_until_ready(nxt))
+        now = time.monotonic()
+        if self.mixed:
+            self.stats["mixed_steps"] += 1
+        if decode_lanes:
+            self.stats["mixed_s"] += now - t0
+            self.stats["decode_steps"] += 1
+        else:
+            # no decode lane rode along (none live, or the phased
+            # engine's batched tail prefill): pure prefill time
+            self.stats["prefill_s"] += now - t0
+        n_tok = len(decode_lanes) + sum(plan.values())
+        self.stats["pages_read"] += r * n_tok
+        self.stats["pages_read_dense_equiv"] += (
+            self.pool.slots_for(self.max_len) * n_tok)
+        if plan:
+            self.stats["prefill_chunks"] += 1
+            self.stats["prefill_tokens"] += sum(plan.values())
+        for i in decode_lanes:
+            t = int(nxt[i])
+            self.lanes[i].generated.append(t)
+            self.lanes[i].token_times.append(now)
+            m["pending"][i] = t
+            m["frontier"][i] += 1
+            m["remaining"][i] -= 1
+            if (m["remaining"][i] <= 0 or m["frontier"][i] >= self.max_len
+                    or (self.eos_id is not None and t == self.eos_id)):
+                m["live"][i] = False     # same cut as _run_slab's
+            self.stats["generated_tokens"] += 1
+            self.stats["decode_tokens"] += 1
+        for i, c in plan.items():
+            pos = self._prefilling[i] + c
+            if pos < self.lanes[i].req.prompt_len:
+                self._prefilling[i] = pos
+                continue
+            del self._prefilling[i]      # tail landed: first token out
+            first = int(nxt[i])
+            self.lanes[i].generated.append(first)
+            self.lanes[i].token_times.append(now)
+            m["pending"][i] = first
+            m["live"][i] = True
+            self.stats["generated_tokens"] += 1
+        self._dirty = True
+
+    def _replay(self, block: np.ndarray, now: float) -> None:
         """Fold a slab's token block into the host mirror using the
         per-lane state the slab returned (downloaded at the same sync —
         the device's stop logic is the single source of truth): lane i
@@ -651,6 +900,7 @@ class Engine:
             kept = int(new["frontier"][i] - self._mirror["frontier"][i])
             self.lanes[i].generated.extend(
                 int(t) for t in block[i, :kept])
+            self.lanes[i].token_times.extend([now] * kept)
             self.stats["generated_tokens"] += kept
             self.stats["decode_tokens"] += kept
         self._mirror = new
@@ -662,15 +912,34 @@ class Engine:
         while len(self.scheduler) or self.active_lanes:
             for r in self.step():
                 out[r.uid] = r
-        # decode throughput (oracle semantics: decode-emitted tokens over
-        # decode time); end-to-end adds prefill in both terms
+        self.finalize_stats()
+        return out
+
+    def finalize_stats(self) -> dict:
+        """Fold the raw counters into derived stats (throughputs, KV
+        peaks, latency percentiles). ``run`` calls this at drain;
+        callers driving ``step`` themselves (continuous-arrival
+        harnesses) call it when their workload ends. Returns stats."""
+        # decode throughput (oracle semantics: decode-emitted tokens
+        # over decode time — mixed fused-call time included, since
+        # those calls carry the decode tokens); e2e adds prefill
+        dec_s = self.stats["decode_s"] + self.stats["mixed_s"]
         self.stats["tok_per_s"] = (
-            self.stats["decode_tokens"] / self.stats["decode_s"]
-            if self.stats["decode_s"] > 0 else 0.0)
-        total_s = self.stats["decode_s"] + self.stats["prefill_s"]
+            self.stats["decode_tokens"] / dec_s if dec_s > 0 else 0.0)
+        total_s = dec_s + self.stats["prefill_s"]
         self.stats["e2e_tok_per_s"] = (
             self.stats["generated_tokens"] / total_s
             if total_s > 0 else 0.0)
+        # per-request latency: TTFT (submit -> first token) and
+        # inter-token gaps, over the requests FINISHED since the last
+        # reset_stats (tokens folded at one host sync share timestamps,
+        # so in-slab gaps read 0 and the slab boundary carries the gap)
+        for name, vals in (("ttft", self._ttft), ("itl", self._itl)):
+            arr = np.asarray(vals, np.float64)
+            self.stats[f"{name}_p50_s"] = (
+                float(np.percentile(arr, 50)) if arr.size else 0.0)
+            self.stats[f"{name}_p95_s"] = (
+                float(np.percentile(arr, 95)) if arr.size else 0.0)
         if self.paged:
             self.stats["peak_kv_pages"] = self.pool.peak_in_use
             # pages live lanes pin at once (shared pages count ONCE):
@@ -689,7 +958,7 @@ class Engine:
                 self.stats["prefill_tokens_skipped"]
                 / max(1, self.stats["prompt_tokens"]))
             self.stats["cached_pages"] = self.pool.cached_pages
-        return out
+        return self.stats
 
 
 def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
@@ -697,7 +966,9 @@ def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
              prefill_chunk: int = 16, slab_k: int = 8,
              max_batch: int | None = None, dist=None, paged: bool = True,
              page_size: int = 16, n_pages: int | None = None,
-             attn_backend: str = "xla", prefix_cache: bool = False):
+             attn_backend: str = "xla", prefix_cache: bool = False,
+             mixed: bool = False,
+             prefill_token_budget: int | None = None):
     """Batch-convenience wrapper: list of ragged 1-D prompts (or a 2-D
     equal-length array) -> (list of per-request token arrays, stats).
 
@@ -714,7 +985,8 @@ def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
                  max_len=max_len, prefill_chunk=prefill_chunk,
                  slab_k=slab_k, eos_id=eos_id, dist=dist, paged=paged,
                  page_size=page_size, n_pages=n_pages,
-                 attn_backend=attn_backend, prefix_cache=prefix_cache)
+                 attn_backend=attn_backend, prefix_cache=prefix_cache,
+                 mixed=mixed, prefill_token_budget=prefill_token_budget)
     uids = [eng.submit(p, max_new_tokens) for p in prompts]
     res = eng.run()
     return [res[u].tokens for u in uids], eng.stats

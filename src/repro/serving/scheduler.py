@@ -50,12 +50,23 @@ class Request:
 
 
 class FIFOScheduler:
-    """FIFO admission with configurable ``max_batch`` / ``max_len``."""
+    """FIFO admission with configurable ``max_batch`` / ``max_len``.
 
-    def __init__(self, max_batch: int, max_len: int):
+    ``prefill_token_budget`` caps the TOKENS one mixed engine step may
+    spend (engine ``mixed=True``): running decode lanes spend one token
+    each first, the remainder is split chunk-granularly across
+    admitting lanes (``plan_chunks``) — so a long prompt is prefilled
+    incrementally across steps instead of monopolizing one, and decode
+    is never stalled by an arriving prompt. ``None`` leaves the budget
+    to the engine's default (phased engines ignore it)."""
+
+    def __init__(self, max_batch: int, max_len: int,
+                 prefill_token_budget: int | None = None):
         assert max_batch >= 1 and max_len >= 2
+        assert prefill_token_budget is None or prefill_token_budget >= 1
         self.max_batch = max_batch
         self.max_len = max_len
+        self.prefill_token_budget = prefill_token_budget
         self._queue: deque[Request] = deque()
         self.reset_stats()
 
@@ -102,6 +113,29 @@ class FIFOScheduler:
                     break
             out.append(self._queue.popleft())
         return out
+
+    def plan_chunks(self, tails: list[tuple[int, int]], n_decode: int,
+                    chunk_cap: int) -> dict[int, int]:
+        """Split one mixed step's prefill-token budget across admitting
+        lanes. ``tails`` is [(lane, remaining_prompt_tokens), ...] in
+        admission order; ``n_decode`` decode tokens are spent FIRST
+        (decode never stalls for prefill — the whole point), and the
+        remaining ``prefill_token_budget - n_decode`` tokens are handed
+        out FIFO, at most ``chunk_cap`` per lane (the mixed step's
+        query width). Returns {lane: chunk_len} — empty when decode
+        already fills the budget (the prompt waits; the budget frees up
+        as lanes finish). A ``None`` budget means chunk-cap-only."""
+        left = (max(self.prefill_token_budget - n_decode, 0)
+                if self.prefill_token_budget is not None
+                else chunk_cap * len(tails))
+        plan: dict[int, int] = {}
+        for lane, rem in tails:
+            c = min(rem, chunk_cap, left)
+            if c <= 0:
+                break
+            plan[lane] = c
+            left -= c
+        return plan
 
     def push_front(self, reqs: list[Request]) -> None:
         """Return admitted-but-not-started requests to the queue HEAD in

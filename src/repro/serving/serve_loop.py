@@ -53,13 +53,13 @@ def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
                                       temperature=temperature))
     nxt = jnp.argmax(last_logits, -1)[:, None].astype(jnp.int32)
     out = [prompts, nxt]
-    t0 = time.time()
+    t0 = time.monotonic()
     for i in range(max_new_tokens - 1):
         pos = jnp.int32(plen + i)
         nxt, cache, _, rng = decode(params, cache, nxt, pos, rng)
         out.append(nxt)
     jax.block_until_ready(nxt)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     toks = jnp.concatenate(out, axis=1)
     stats = {"decode_s": dt,
              "tok_per_s": b * (max_new_tokens - 1) / max(dt, 1e-9)}

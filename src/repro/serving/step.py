@@ -165,6 +165,43 @@ def make_paged_decode_slab_step(cfg, k_steps: int, max_len: int,
     return slab
 
 
+def make_mixed_step(cfg, dist=None):
+    """Jitted MIXED decode+prefill step (engine ``mixed=True``): one
+    pass of the transformer stack over a (B, W) token batch with
+    per-lane variable query lengths — running lanes contribute ONE
+    decode token each (q_len 1 at start = their frontier), admitting
+    lanes contribute a prefill chunk (q_len = chunk at start = their
+    prefill position), idle lanes ride along masked out (q_len 0).
+    Decode throughput is never zeroed by an arriving prompt, and the
+    uncovered tails of several prefix-cached admissions coalesce into
+    this one call instead of per-lane prefill loops.
+
+    Each lane's next token is the argmax of its LAST valid row — for a
+    decode lane that is its next decode token, for a lane finishing its
+    prompt this step it is the request's first generated token, and for
+    a mid-prompt or idle lane it is garbage the host ignores. Only the
+    (B,) token vector crosses to the host.
+
+    ``read_pages`` must be jit-STATIC and cover every lane's
+    ``start + q_len`` (the engine buckets it to a power of two); W is
+    baked into the trace, so the engine buckets the width too.
+
+    mixed(params, cache, tokens (B,W), starts (B,), q_lens (B,),
+          offsets (B,), block_tables, read_pages)
+        -> (next_tokens (B,) int32, new_cache)
+    """
+    def mixed_step(params, cache, tokens, starts, q_lens, offsets,
+                   block_tables, read_pages):
+        logits, cache = registry.paged_prefill_chunk(
+            cfg, params, cache, tokens, starts, offsets, block_tables,
+            read_pages=read_pages, masks=None, dist=dist, q_lens=q_lens)
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(q_lens.astype(jnp.int32) - 1,
+                                0)[:, None, None], axis=1)[:, 0]
+        return jnp.argmax(last, -1).astype(jnp.int32), cache
+    return mixed_step
+
+
 def make_copy_pages_step():
     """Jittable copy-on-write page copy over the paged pool
     (engine.py + serving/prefix_cache.py): duplicate pool pages ``src``

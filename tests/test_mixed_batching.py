@@ -1,0 +1,314 @@
+"""Stall-free mixed batching (engine ``mixed=True`` + serving/step.py
+``make_mixed_step`` + scheduler ``prefill_token_budget``):
+
+  * greedy tokens are BITWISE-identical mixed vs phased vs the solo
+    ``serve_loop`` oracle — across ragged continuous admission,
+    mid-slab eviction/readmission, eos mid-stream, truncation at the
+    slot cap, and prefix-cache partial hits;
+  * decode never stalls for an arriving prompt: under continuous
+    arrivals ``stalled_decode_steps`` is structurally 0 in mixed mode
+    while the phased engine racks them up;
+  * a long prompt is admitted CHUNK-GRANULARLY under the token budget —
+    running lanes keep emitting tokens between its prefill chunks
+    instead of waiting for a blocking prefill loop;
+  * prefix-cached admissions landing in the same step share ONE
+    batched tail-prefill call (phased) or fuse into the decode steps
+    (mixed) — never a per-lane chunk loop each;
+  * TTFT / inter-token latency are recorded per request.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import tiny_cfg
+from repro.models import registry
+from repro.serving import engine, serve_loop
+from repro.serving.scheduler import FIFOScheduler
+
+KW = dict(max_len=32, prefill_chunk=4, slab_k=4, page_size=4)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_cfg()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=(int(p),))
+            .astype(np.int32) for p in lens]
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("slab_k", [1, 4])
+def test_mixed_bitwise_parity_ragged_admission_eviction(model, slab_k):
+    """6 ragged requests over 2 lanes (continuous admission, mid-run
+    eviction + readmission onto recycled pages): the mixed engine must
+    emit exactly the phased engine's tokens, which match each request's
+    solo oracle generation."""
+    cfg, params = model
+    prompts = _prompts(cfg, [6, 3, 5, 7, 4, 6], seed=7)
+    budgets = (3, 9, 5, 2, 7, 4)
+
+    def run(mixed):
+        eng = engine.Engine(cfg, params, max_batch=2, mixed=mixed,
+                            **dict(KW, slab_k=slab_k))
+        uids = [eng.submit(p, n) for p, n in zip(prompts, budgets)]
+        return uids, eng.run()
+
+    uids0, phased = run(False)
+    uids1, mix = run(True)
+    assert uids0 == uids1
+    for u, p, n in zip(uids0, prompts, budgets):
+        np.testing.assert_array_equal(mix[u].tokens, phased[u].tokens)
+        assert mix[u].truncated == phased[u].truncated
+        want, _ = serve_loop.generate(cfg, params, jnp.asarray(p)[None],
+                                      max_new_tokens=n, max_len=32)
+        np.testing.assert_array_equal(mix[u].tokens, np.asarray(want)[0])
+
+
+def _drive_continuous(cfg, params, prompts, budgets, *, mixed, **kw):
+    """Submit one request per engine step (arrivals land while other
+    lanes decode), drain, and finalize stats like ``run`` would."""
+    eng = engine.Engine(cfg, params, mixed=mixed, **kw)
+    uids = [eng.submit(prompts[0], budgets[0])]
+    res, k, guard = {}, 1, 0
+    while k < len(prompts) or eng.active_lanes or len(eng.scheduler):
+        if k < len(prompts):
+            uids.append(eng.submit(prompts[k], budgets[k]))
+            k += 1
+        for r in eng.step():
+            res[r.uid] = r
+        guard += 1
+        assert guard < 400, "engine failed to drain"
+    eng.finalize_stats()
+    return uids, res, eng.stats
+
+
+def test_mixed_decode_never_stalls_under_continuous_arrivals(model):
+    """Prompts arriving mid-decode: the phased engine's blocking
+    admission prefill stalls the running lanes (counter > 0); the mixed
+    engine fuses those chunks into the decode step (counter == 0) and
+    still emits bitwise-identical tokens. Budgets are RAGGED — equal
+    budgets would let admission groups finish in lockstep, so no lane
+    would ever be mid-decode when the next prompt admits."""
+    cfg, params = model
+    prompts = _prompts(cfg, [6, 7, 5, 8, 6], seed=3)
+    budgets = (8, 4, 9, 3, 7)
+    kw = dict(KW, max_batch=2, slab_k=2)
+    u0, phased, st0 = _drive_continuous(cfg, params, prompts, budgets,
+                                        mixed=False, **kw)
+    u1, mix, st1 = _drive_continuous(cfg, params, prompts, budgets,
+                                     mixed=True, **kw)
+    assert u0 == u1
+    for u in u0:
+        np.testing.assert_array_equal(mix[u].tokens, phased[u].tokens)
+    assert st0["stalled_decode_steps"] > 0      # phased: decode waited
+    assert st1["stalled_decode_steps"] == 0     # mixed: never
+    assert st1["mixed_steps"] > 0               # prefill rode along
+    assert st1["decode_tokens"] == st0["decode_tokens"]
+
+
+def test_token_budget_admits_long_prompt_chunk_granularly(model):
+    """A 24-token prompt under prefill_token_budget=6 with a decode
+    lane running: the prompt must enter over several fused steps (4
+    prefill tokens each: budget 6 - 1 decode token, capped by the
+    4-token chunk) while the running lane KEEPS EMITTING between those
+    chunks — and the tokens still match the phased engine."""
+    cfg, params = model
+    long_p, short_p = _prompts(cfg, [24, 5], seed=11)
+    kw = dict(max_len=40, prefill_chunk=4, slab_k=2, page_size=4,
+              max_batch=2)
+
+    def emitted(eng, uid):
+        lanes = [i for i in eng.active_lanes
+                 if eng.lanes[i].req.uid == uid]
+        return len(eng.lanes[lanes[0]].generated) if lanes else None
+
+    def run(mixed):
+        eng = engine.Engine(cfg, params, mixed=mixed,
+                            prefill_token_budget=6, **kw)
+        u_short = eng.submit(short_p, 12)
+        eng.step()                       # short prompt is decoding
+        u_long = eng.submit(long_p, 4)
+        grew = 0
+        eng.step()                       # admits the long prompt
+        while eng._prefilling:           # mixed only: incremental entry
+            before = emitted(eng, u_short)
+            eng.step()
+            after = emitted(eng, u_short)
+            grew += int(before is not None and after is not None
+                        and after > before)
+        res = eng.run()
+        return res[u_short].tokens, res[u_long].tokens, eng.stats, grew
+
+    s0, l0, st0, _ = run(False)
+    s1, l1, st1, grew = run(True)
+    np.testing.assert_array_equal(s0, s1)
+    np.testing.assert_array_equal(l0, l1)
+    # 24 tokens at <= 4 per fused step: at least 6 fused steps, decode
+    # advancing alongside (never stalled)
+    assert st1["mixed_steps"] >= 6
+    assert grew >= 5
+    assert st1["stalled_decode_steps"] == 0
+    assert st0["stalled_decode_steps"] > 0
+
+
+def test_mixed_eos_mid_stream_parity(model):
+    cfg, params = model
+    prompts = _prompts(cfg, [5, 7], seed=4)
+    free, _ = engine.generate(cfg, params, prompts, max_new_tokens=10,
+                              **dict(KW, slab_k=1))
+    eos = int(free[1][prompts[1].size + 4])
+
+    def run(mixed):
+        eng = engine.Engine(cfg, params, max_batch=2, eos_id=eos,
+                            mixed=mixed, **KW)
+        uids = [eng.submit(p, 10) for p in prompts]
+        return uids, eng.run()
+
+    uids, phased = run(False)
+    uids1, mix = run(True)
+    assert uids == uids1
+    for u in uids:
+        np.testing.assert_array_equal(mix[u].tokens, phased[u].tokens)
+    assert mix[uids[1]].generated[-1] == eos
+
+
+def test_mixed_truncation_at_slot_cap_parity(model):
+    """Lanes that run out of cache slots truncate at exactly the phased
+    engine's token. max_batch=1 keeps phased admission groups singleton
+    (offset 0), matching mixed's per-lane admission headroom."""
+    cfg, params = model
+    prompts = _prompts(cfg, [6, 3], seed=5)
+
+    def run(mixed):
+        eng = engine.Engine(cfg, params, max_batch=1, max_len=10,
+                            prefill_chunk=4, slab_k=8, page_size=4,
+                            mixed=mixed)
+        uids = [eng.submit(p, 16) for p in prompts]
+        return uids, eng.run(), eng.stats["truncated"]
+
+    uids, phased, tr0 = run(False)
+    uids1, mix, tr1 = run(True)
+    assert tr0 == tr1 == 2
+    for u in uids:
+        assert mix[u].truncated and phased[u].truncated
+        np.testing.assert_array_equal(mix[u].tokens, phased[u].tokens)
+
+
+# ------------------------------------------------------------ prefix cache
+def test_mixed_prefix_cache_partial_hits_parity(model):
+    """Mixed batching composed with the radix-tree prefix cache: full,
+    partial and disjoint hits, CoW divergence inside the boundary page
+    — bitwise parity with the phased shared engine AND sharing-off."""
+    cfg, params = model
+    rng = np.random.default_rng(19)
+    sys_p = rng.integers(0, cfg.vocab_size, size=(9,)).astype(np.int32)
+    prompts = [np.concatenate([sys_p, [5]]).astype(np.int32),
+               np.concatenate([sys_p, [7, 3]]).astype(np.int32),
+               np.concatenate([sys_p[:5], rng.integers(
+                   0, cfg.vocab_size, size=(4,)).astype(np.int32)]),
+               rng.integers(0, cfg.vocab_size, size=(7,))
+               .astype(np.int32)]
+    budgets = (4, 6, 3, 5)
+    kw = dict(KW, slab_k=2, max_batch=2, n_pages=24)
+
+    def run(mixed, pc):
+        eng = engine.Engine(cfg, params, prefix_cache=pc, mixed=mixed,
+                            **kw)
+        if pc:
+            eng.submit(sys_p, 1)
+            eng.run()
+            eng.reset_stats()
+        uids = [eng.submit(p, n) for p, n in zip(prompts, budgets)]
+        res = eng.run()
+        return [res[u].tokens for u in uids], eng.stats
+
+    off, _ = run(False, False)
+    phased_on, st0 = run(False, True)
+    mixed_on, st1 = run(True, True)
+    for a, b, c in zip(off, phased_on, mixed_on):
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a, c)
+    assert st1["prefix_hits"] > 0
+    assert st1["prefill_tokens_skipped"] > 0
+    assert st1["stalled_decode_steps"] == 0
+    assert (st1["prefill_tokens"] + st1["prefill_tokens_skipped"]
+            == st1["prompt_tokens"])
+
+
+def test_admit_shared_batches_cross_request_tail_prefill(model):
+    """Satellite: two prefix-cached admissions landing in the SAME
+    admission round share one prefill call per chunk round instead of a
+    per-lane chunk loop each — ``prefill_chunks`` counts jitted calls,
+    so two 4-token tails through one batched call cost ONE chunk, not
+    two. Tokens stay bitwise-identical to sharing-off."""
+    cfg, params = model
+    rng = np.random.default_rng(23)
+    sys_p = rng.integers(0, cfg.vocab_size, size=(12,)).astype(np.int32)
+    p1 = np.concatenate([sys_p, [3, 9, 1]]).astype(np.int32)
+    p2 = np.concatenate([sys_p, [8, 2, 4]]).astype(np.int32)
+    kw = dict(KW, slab_k=2, max_batch=2, n_pages=24)
+    eng = engine.Engine(cfg, params, prefix_cache=True, **kw)
+    eng.submit(sys_p, 1)
+    eng.run()                            # warm the tree
+    eng.reset_stats()
+    ua, ub = eng.submit(p1, 4), eng.submit(p2, 4)
+    eng.step()
+    assert eng.stats["admitted"] == 2    # same admission round
+    # both 3-token uncovered tails fit one 4-wide chunk: ONE batched
+    # call for the round, not one per lane
+    assert eng.stats["prefill_chunks"] == 1
+    assert eng.stats["prefill_tokens"] == 6
+    res = eng.run()
+    off, _ = engine.generate(cfg, params, [p1, p2], max_new_tokens=4,
+                             **dict(kw, prefix_cache=False))
+    np.testing.assert_array_equal(res[ua].tokens, off[0])
+    np.testing.assert_array_equal(res[ub].tokens, off[1])
+
+
+# ------------------------------------------------------- budget scheduler
+def test_plan_chunks_spends_decode_first_then_fifo():
+    s = FIFOScheduler(max_batch=4, max_len=32, prefill_token_budget=8)
+    # 3 decode tokens spent first; 5 left: lane 7 gets the 4-token
+    # chunk cap, lane 9 the single remaining token
+    assert s.plan_chunks([(7, 10), (9, 6)], n_decode=3, chunk_cap=4) \
+        == {7: 4, 9: 1}
+    # decode saturates the budget: prompts wait (no stall, no chunk)
+    assert s.plan_chunks([(7, 10)], n_decode=8, chunk_cap=4) == {}
+    # no decode lanes: full budget to the head prompt, FIFO order
+    assert s.plan_chunks([(1, 3), (2, 9)], n_decode=0, chunk_cap=4) \
+        == {1: 3, 2: 4}
+    # remaining-tokens cap wins over chunk cap
+    assert s.plan_chunks([(5, 2)], n_decode=0, chunk_cap=4) == {5: 2}
+    # None budget: chunk-cap-only (the phased tail-prefill shape)
+    s2 = FIFOScheduler(max_batch=4, max_len=32)
+    assert s2.plan_chunks([(1, 9), (2, 9)], n_decode=0, chunk_cap=4) \
+        == {1: 4, 2: 4}
+
+
+def test_mixed_requires_paged(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="requires paged"):
+        engine.Engine(cfg, params, max_batch=1, max_len=16,
+                      paged=False, mixed=True)
+
+
+# ------------------------------------------------------------ observability
+@pytest.mark.parametrize("mixed", [False, True])
+def test_ttft_and_itl_recorded_per_request(model, mixed):
+    cfg, params = model
+    eng = engine.Engine(cfg, params, max_batch=2, mixed=mixed, **KW)
+    uids = [eng.submit(p, 6) for p in _prompts(cfg, [5, 7], seed=2)]
+    res = eng.run()
+    for u in uids:
+        assert res[u].ttft_s > 0.0       # submit -> first token
+    st = eng.stats
+    assert st["ttft_p95_s"] >= st["ttft_p50_s"] > 0.0
+    assert st["itl_p95_s"] >= st["itl_p50_s"] >= 0.0
+    assert len(eng._ttft) == 2
+    assert len(eng._itl) == 2 * 5        # budget-1 decode gaps each

@@ -267,6 +267,50 @@ def test_paged_flash_decode_kernel_matches_xla_gather():
             np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+def test_kernel_tolerates_mixed_read_buckets():
+    """Mixed batching admits lanes whose live contexts differ wildly,
+    all read under ONE shared ``read_pages`` bucket. A short lane's
+    block-table entries past its allocation point at pool page 0 —
+    which here BELONGS to the long lane — so the kernel must let the
+    bias masking zero those pages out entirely: the short lane's output
+    under the wide shared bucket must equal its own narrow-bucket
+    (R=1) result, and both lanes must match the XLA gather oracle."""
+    from repro.kernels import paged_attention as pk
+    cfg = tiny_cfg()
+    rng = np.random.default_rng(5)
+    kvh, g, hd, ps, n_pages, r = 2, 1, 16, 4, 8, 4
+    q4 = jnp.asarray(rng.normal(size=(2, kvh, g, hd)), jnp.float32)
+    pool_k = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, hd)),
+                         jnp.float32)
+    pool_v = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, hd)),
+                         jnp.float32)
+    # lane 0: ONE live page (page 2); its table rows 1.. default to 0,
+    # aliasing the long lane's first page. lane 1: four live pages.
+    bt = jnp.asarray([[2, 0, 0, 0], [0, 1, 5, 7]], jnp.int32)
+    offsets = jnp.asarray([0, 0], jnp.int32)
+    posv = jnp.asarray([2, 14], jnp.int32)        # frontiers 3 vs 15
+    posb = posv[:, None]
+    kpos = attn._cache_positions(r * ps, offsets)
+    bias = pk.mask_bias(posb, kpos, 0)
+    got = pk.paged_flash_decode(q4, pool_k, pool_v, bt, bias,
+                                scale=1.0 / np.sqrt(hd), interpret=True)
+    gk = attn.gather_pages(pool_k, bt, r)
+    gv = attn.gather_pages(pool_v, bt, r)
+    want = attn._scores_to_out(cfg, q4.reshape(2, 1, kvh * g, hd),
+                               gk, gv, posb, kpos, causal=True, window=0)
+    np.testing.assert_allclose(np.asarray(got).reshape(2, 1, kvh * g, hd),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+    # short lane alone under its OWN narrow bucket: identical output —
+    # the aliased page-0 reads contributed nothing
+    bias1 = pk.mask_bias(posb[:1], attn._cache_positions(ps, offsets[:1]),
+                         0)
+    solo = pk.paged_flash_decode(q4[:1], pool_k, pool_v, bt[:1, :1],
+                                 bias1, scale=1.0 / np.sqrt(hd),
+                                 interpret=True)
+    np.testing.assert_allclose(np.asarray(got)[0], np.asarray(solo)[0],
+                               rtol=1e-6, atol=1e-6)
+
+
 def test_pallas_interp_engine_token_parity(model):
     """attn_backend='pallas_interp' through the whole engine: greedy
     tokens match the XLA gather path exactly."""

@@ -268,3 +268,41 @@ def test_engine_rejects_non_kv_families(model):
     bad = dataclasses.replace(cfg, family="ssm")
     with pytest.raises(NotImplementedError):
         engine.Engine(bad, {}, max_batch=1, max_len=8)
+
+
+@pytest.mark.parametrize("mixed", [False, True])
+def test_reset_stats_and_observability_counters(model, mixed):
+    """Scheduler observability (queue depth high-water, page-gate
+    rejections, queued time) and the mixed-batching counters (fused
+    steps, stall counter, TTFT/ITL percentiles) are tracked under BOTH
+    scheduling modes and all cleared by reset_stats."""
+    cfg, params = model
+    eng = engine.Engine(cfg, params, max_batch=3, max_len=32,
+                        prefill_chunk=4, slab_k=2, page_size=4,
+                        n_pages=4, mixed=mixed)   # pool fits one at a time
+    for p in _prompts(cfg, [8, 8, 8], seed=9):
+        eng.submit(p, 5)
+    assert eng.stats["queue_depth_peak"] == 3
+    eng.step()                      # one admits; the page gate blocks two
+    assert eng.stats["admitted"] == 1
+    assert eng.scheduler.rejections >= 1
+    eng.run()
+    st = eng.stats
+    assert st["admission_rejections"] >= 1
+    assert st["queued_s_total"] >= st["queued_s_max"] >= 0.0
+    assert st["ttft_p95_s"] >= st["ttft_p50_s"] > 0.0
+    if mixed:
+        # serialized admissions never overlap running decode: the
+        # fused step fires per admission, decode is never stalled
+        assert st["mixed_steps"] >= 3
+        assert st["stalled_decode_steps"] == 0
+    else:
+        assert st["mixed_steps"] == 0
+    eng.reset_stats()
+    for key in ("queue_depth_peak", "admission_rejections",
+                "queued_s_total", "queued_s_max", "mixed_steps",
+                "mixed_s", "stalled_decode_steps", "prefill_chunks",
+                "decode_tokens"):
+        assert not eng.stats[key], key
+    assert eng.scheduler.rejections == 0
+    assert eng._ttft == [] and eng._itl == []
