@@ -7,13 +7,17 @@ per-token baseline: one host sync per token) for BOTH KV-cache layouts
 radix-tree prefix cache on vs off (hit rate, prefill tokens skipped,
 referenced-KV peak), a MIXED-vs-PHASED sweep under continuous arrivals
 (one submit per engine step: decode-stall steps, TTFT / inter-token
-p50/p95), and a ``BENCH_serving.json`` artifact — tok/s, peak KV-cache
-bytes, block-table page-read counters, and scheduler observability
-(queue depth, page-gate rejections, queued time) — so the serving perf
+p50/p95), a multi-tenant FRONT-DOOR trace (interactive + batch priority
+classes) under FIFO vs SLA vs SLA+preemption-with-host-KV-offload
+(per-class TTFT p95, preemption / offload counters), and a
+``BENCH_serving.json`` artifact — tok/s, peak KV-cache bytes,
+block-table page-read counters, and scheduler observability (queue
+depth, page-gate rejections, queued time) — so the serving perf
 trajectory is tracked PR over PR (CI uploads it on every run).
 
     PYTHONPATH=src:. python benchmarks/bench_inference.py \
-        [--smoke] [--mixed-only] [--out BENCH_serving.json]
+        [--smoke] [--mixed-only] [--frontdoor-only] \
+        [--out BENCH_serving.json]
 
 ``--smoke`` runs a tiny config through the same dispatch path (CI guard
 against decode-loop regressions; kernels on the CPU-safe XLA backend)
@@ -27,11 +31,21 @@ batching — bitwise token parity mixed vs phased vs the oracle under
 continuous arrivals, decode stalls ELIMINATED (the counter reads 0
 where phased racks them up), and TTFT p95 no worse than phased.
 ``--mixed-only`` runs just the mixed sweep + its asserts (the CI
-mixed-smoke job).
+mixed-smoke job). ``--frontdoor-only`` runs just the front-door sweep
+and HARD-ASSERTS the production-API guarantees: tokens bitwise-equal
+across FIFO / SLA / SLA+preempt schedulers, interactive TTFT p95
+STRICTLY better under SLA than FIFO on the same trace, >=1 real
+preemption with zero re-prefilled tokens (prefill counters equal,
+restored == offloaded pages), no batch request starved past the aging
+bound under a sustained interactive flood, and the asyncio front end
+serving continuous arrivals with zero stalled decode steps and bounded
+TTFT p95 while streaming bitwise-correct tokens (the CI async-smoke
+job).
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 
 import jax
@@ -42,6 +56,9 @@ from benchmarks.common import bench_cfg, replace_blast, row, timeit
 from repro.core.prune_grow import initial_mask
 from repro.models import registry
 from repro.serving import engine, export, serve_loop
+from repro.serving.frontend import AsyncEngine
+from repro.serving.scheduler import (BATCH, INTERACTIVE, FIFOScheduler,
+                                     SLAScheduler)
 
 SLAB_SIZES = (1, 4, 16)
 
@@ -295,6 +312,240 @@ def _mixed_sweep(cfg, label: str, params, *, sparsity: float,
         })
 
 
+def _sla_trace_run(eng, batch_prompts, inter_prompts, *,
+                   batch_budget: int, inter_budget: int):
+    """The mixed interactive+batch arrival trace: every batch job is
+    queued up front (saturating the lanes), interactive requests then
+    arrive every other engine step mid-decode. The SAME submission
+    script runs under every scheduler — FIFO simply ignores the
+    priority tags. Returns (batch_uids, inter_uids, results, stats)."""
+    uids_b = [eng.submit(p, batch_budget, priority=BATCH)
+              for p in batch_prompts]
+    uids_i, res, k, guard = [], {}, 0, 0
+    while (eng.active_lanes or len(eng.scheduler) or eng._preempted
+           or k < len(inter_prompts)):
+        if k < len(inter_prompts) and guard % 2 == 1:
+            uids_i.append(eng.submit(inter_prompts[k], inter_budget,
+                                     priority=INTERACTIVE))
+            k += 1
+        for r in eng.step():
+            res[r.uid] = r
+        guard += 1
+        assert guard < 100_000, "engine failed to drain"
+    eng.finalize_stats()
+    return uids_b, uids_i, res, dict(eng.stats)
+
+
+def _frontdoor_stats(cfg, params, *, kind: str, n_batch: int = 6,
+                     n_inter: int = 4, max_batch: int = 2,
+                     max_len: int = 64, page_size: int = 8,
+                     batch_budget: int = 17, inter_budget: int = 5,
+                     seed: int = 5):
+    """One scheduler flavor over the SLA trace: ``fifo`` (the parity
+    baseline — priority tags ignored), ``sla`` (class-ordered
+    admission), or ``sla_preempt`` (plus lane/page preemption with host
+    KV offload). Returns (per-class TTFT p95s, results keyed by class,
+    stats) from one measured pass after a jit-warm pass."""
+    rng = np.random.default_rng(seed)
+    batch_prompts = [rng.integers(0, cfg.vocab_size, size=(int(n),))
+                     .astype(np.int32)
+                     for n in rng.integers(8, 13, size=n_batch)]
+    inter_prompts = [rng.integers(0, cfg.vocab_size, size=(int(n),))
+                     .astype(np.int32)
+                     for n in rng.integers(4, 9, size=n_inter)]
+    if kind == "fifo":
+        sched = FIFOScheduler(max_batch, max_len)
+    else:
+        sched = SLAScheduler(max_batch, max_len, aging_s=5.0)
+    eng = engine.Engine(cfg, params, max_batch=max_batch,
+                        max_len=max_len, prefill_chunk=8, slab_k=2,
+                        page_size=page_size, scheduler=sched,
+                        preempt=(kind == "sla_preempt"))
+    kw = dict(batch_budget=batch_budget, inter_budget=inter_budget)
+    _sla_trace_run(eng, batch_prompts, inter_prompts, **kw)  # warm jit
+    eng.reset_stats()
+    ub, ui, res, st = _sla_trace_run(eng, batch_prompts, inter_prompts,
+                                     **kw)
+    ttft = {
+        "inter_p95": float(np.percentile(
+            [res[u].ttft_s for u in ui], 95)),
+        "batch_p95": float(np.percentile(
+            [res[u].ttft_s for u in ub], 95)),
+    }
+    toks = {"batch": [res[u].generated.tolist() for u in ub],
+            "inter": [res[u].generated.tolist() for u in ui]}
+    return ttft, toks, st
+
+
+def _frontdoor_sweep(cfg, label: str, params, *, sparsity: float,
+                     results: list, **kw) -> None:
+    """FIFO vs SLA vs SLA+preemption over the same interactive+batch
+    trace: the rows carry per-class TTFT p95 and the preemption/offload
+    counters, so the multi-tenant latency story is tracked PR over
+    PR."""
+    for kind in ("fifo", "sla", "sla_preempt"):
+        ttft, _, st = _frontdoor_stats(cfg, params, kind=kind, **kw)
+        name = f"engine_{label}_frontdoor_{kind}"
+        row(name, 1e6 / max(st["e2e_tok_per_s"], 1e-9),
+            f"e2e_tok_per_s={st['e2e_tok_per_s']:.1f} "
+            f"ttft_p95_inter_ms={ttft['inter_p95'] * 1e3:.1f} "
+            f"ttft_p95_batch_ms={ttft['batch_p95'] * 1e3:.1f} "
+            f"preemptions={st['preemptions']}")
+        results.append({
+            "name": name, "scheduler": kind, "sparsity": sparsity,
+            "e2e_tok_per_s": st["e2e_tok_per_s"],
+            "decode_tok_per_s": st["tok_per_s"],
+            "ttft_p95_interactive_s": ttft["inter_p95"],
+            "ttft_p95_batch_s": ttft["batch_p95"],
+            "ttft_p95_s": st["ttft_p95_s"],
+            "preemptions": st["preemptions"],
+            "restores": st["restores"],
+            "offloaded_pages": st["offloaded_pages"],
+            "restored_pages": st["restored_pages"],
+            "preempt_pinned_pages": st["preempt_pinned_pages"],
+            "offload_bytes_peak": st["offload_bytes_peak"],
+            "prefill_tokens": st["prefill_tokens"],
+            "queue_depth_peak": st["queue_depth_peak"],
+            "admission_rejections": st["admission_rejections"],
+            "admission_rejected_steps": st["admission_rejected_steps"],
+            "queued_s_max": st["queued_s_max"],
+        })
+
+
+def _check_frontdoor_guarantees(cfg, params) -> None:
+    """--smoke hard asserts for the production front door (acceptance
+    criteria): (a) under the mixed interactive+batch trace, the SLA
+    scheduler's interactive-class TTFT p95 is STRICTLY lower than plain
+    FIFO's on the same trace; (b) with ``preempt=True`` the
+    lane-blocked interactive head actually preempts batch lanes (>=1
+    preemption, KV offloaded and restored) with ZERO re-prefilled
+    tokens — prefill_tokens equal to the non-preempting run; and
+    (c) greedy tokens are bitwise-identical across all three
+    schedulers (admission ORDER changes, per-request streams must
+    not)."""
+    t_fifo, toks_fifo, st_fifo = _frontdoor_stats(cfg, params,
+                                                  kind="fifo")
+    t_sla, toks_sla, st_sla = _frontdoor_stats(cfg, params, kind="sla")
+    t_pre, toks_pre, st_pre = _frontdoor_stats(cfg, params,
+                                               kind="sla_preempt")
+    assert toks_fifo == toks_sla == toks_pre
+    assert t_sla["inter_p95"] < t_fifo["inter_p95"], (t_sla, t_fifo)
+    assert st_pre["preemptions"] >= 1 and st_pre["restores"] >= 1, st_pre
+    assert st_pre["prefill_tokens"] == st_sla["prefill_tokens"], \
+        (st_pre["prefill_tokens"], st_sla["prefill_tokens"])
+    assert st_pre["restored_pages"] == st_pre["offloaded_pages"], st_pre
+    print("# frontdoor SLA/preempt OK: "
+          f"ttft_p95_inter_fifo={t_fifo['inter_p95'] * 1e3:.1f}ms "
+          f"sla={t_sla['inter_p95'] * 1e3:.1f}ms "
+          f"preempt={t_pre['inter_p95'] * 1e3:.1f}ms "
+          f"preemptions={st_pre['preemptions']} "
+          f"offloaded_pages={st_pre['offloaded_pages']}")
+
+
+def _check_no_starvation(cfg, params) -> None:
+    """--smoke hard assert: the aging bound holds END TO END — a batch
+    request under a sustained interactive flood (arrivals outpace
+    service, the backlog never empties) is still admitted through the
+    real engine, WHILE the flood continues, within the property-test
+    bound scaled to the trace."""
+    rng = np.random.default_rng(7)
+    p_batch = rng.integers(0, cfg.vocab_size, size=(8,)).astype(np.int32)
+    eng = engine.Engine(cfg, params, max_batch=1, max_len=32,
+                        prefill_chunk=8, slab_k=2, page_size=8,
+                        scheduler=SLAScheduler(1, 32, aging_s=0.05))
+    eng.submit(p_batch, 2, priority=BATCH)     # warm jit on both shapes
+    eng.submit(rng.integers(0, cfg.vocab_size, size=(5,))
+               .astype(np.int32), 2, priority=INTERACTIVE)
+    eng.run()
+    eng.reset_stats()
+    ub = eng.submit(p_batch, 2, priority=BATCH)
+    admitted = False
+    for _ in range(300):
+        # flood: one interactive per step, service <= 1 per 2 steps
+        eng.submit(rng.integers(0, cfg.vocab_size, size=(5,))
+                   .astype(np.int32), 2, priority=INTERACTIVE)
+        res = eng.step()
+        if (any(eng.lanes[i].req.uid == ub for i in eng.active_lanes)
+                or any(r.uid == ub for r in res)):
+            admitted = True
+            break
+    assert admitted, "batch request starved under interactive flood"
+    # the flood NEVER let up: admission happened past the backlog, by
+    # aging, not because the queue drained
+    assert len(eng.scheduler) > 0
+    print(f"# no-starvation OK: batch admitted with "
+          f"{len(eng.scheduler)} interactive requests still queued")
+
+
+def _check_async_guarantees(cfg, params) -> None:
+    """--smoke hard asserts for the asyncio front end (the CI
+    async-smoke job): continuous arrivals stream through
+    ``AsyncEngine`` over the mixed engine under a WALL-CLOCK timeout,
+    and (a) every stream's tokens equal its final GenResult and the
+    synchronous engine's run of the same workload (bitwise), (b) zero
+    stalled decode steps (the mixed guarantee must survive the thread
+    hop), and (c) TTFT p95 bounded RELATIVE to the synchronous
+    engine's on the same workload — the thread hop and inbox must not
+    blow up time-to-first-token (a relative bound stays meaningful
+    when the host is loaded; an absolute ceiling would flake)."""
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32) for n in rng.integers(6, 15, size=8)]
+    budgets = [int(b) for b in rng.integers(4, 10, size=8)]
+
+    def make():
+        return engine.Engine(cfg, params, max_batch=2, max_len=64,
+                             prefill_chunk=8, slab_k=4, page_size=8,
+                             mixed=True,
+                             scheduler=SLAScheduler(2, 64, aging_s=5.0))
+
+    sync = make()
+    uids = [sync.submit(p, b) for p, b in zip(prompts, budgets)]
+    base = {u: r.generated.tolist() for u, r in sync.run().items()}
+    want = [base[u] for u in uids]
+    sync_ttft_p95 = sync.stats["ttft_p95_s"]
+
+    eng = make()
+    # warm the jit OUTSIDE the timed async drive (compile time is not
+    # serving latency)
+    for p, b in zip(prompts, budgets):
+        eng.submit(p, b)
+    eng.run()
+    eng.reset_stats()
+
+    async def drive():
+        async with AsyncEngine(eng) as front:
+            streams = []
+            for i, (p, b) in enumerate(zip(prompts, budgets)):
+                streams.append(await front.submit_async(
+                    p, b, priority=i % 2))
+                await asyncio.sleep(0.002)     # continuous arrivals
+            got = []
+            for s in streams:
+                toks = []
+                async for chunk in s:
+                    toks.extend(chunk)
+                res = await s.result()
+                assert toks == res.generated.tolist()
+                got.append(toks)
+            return got
+
+    got = asyncio.run(asyncio.wait_for(drive(), timeout=180.0))
+    assert got == want, "async front end diverged from sync engine"
+    assert eng.stats["stalled_decode_steps"] == 0, eng.stats
+    # the sync run queues everything up front (worst-case backlog TTFT);
+    # the async drive trickles arrivals, so 2x + scheduling slack is a
+    # real regression bound for the thread hop, not headroom
+    bound = 2.0 * sync_ttft_p95 + 0.25
+    assert eng.stats["ttft_p95_s"] < bound, \
+        (eng.stats["ttft_p95_s"], sync_ttft_p95)
+    assert eng.stats["generated_tokens"] == sum(budgets)
+    print("# async front end OK: "
+          f"ttft_p95={eng.stats['ttft_p95_s'] * 1e3:.1f}ms "
+          f"stalled_decode_steps={eng.stats['stalled_decode_steps']} "
+          f"streams={len(got)}")
+
+
 def _check_mixed_guarantees(cfg, params) -> None:
     """--smoke hard asserts for mixed batching, under continuous
     arrivals (one submit per step): (a) greedy tokens BITWISE-equal
@@ -412,17 +663,20 @@ def _check_paged_guarantees(cfg, params) -> None:
 
 
 def main(smoke: bool = False, out: str = "BENCH_serving.json",
-         mixed_only: bool = False):
+         mixed_only: bool = False, frontdoor_only: bool = False):
     results: list[dict] = []
     check = None
-    if smoke or mixed_only:
+    if smoke or mixed_only or frontdoor_only:
         # tiny config through the REAL dispatch path: decode slabs,
         # per-lane frontiers, paged pool, packed XLA-backend kernels
         cfg = bench_cfg(num_layers=1, d_model=64, d_ff=128,
                         vocab_size=128, num_heads=2, num_kv_heads=2)
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
         check = (cfg, params)
-        if not mixed_only:
+        if frontdoor_only:
+            _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
+                             results=results)
+        elif not mixed_only:
             for paged in (True, False):
                 _serving_sweep(cfg, "dense", params, sparsity=0.0,
                                results=results, slab_sizes=(1, 4),
@@ -438,9 +692,13 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
             _prefix_sweep(cfg, "dense", params, sparsity=0.0,
                           results=results, n_req=4, max_batch=2,
                           sys_len=24, sfx_len=4, new_tokens=5)
-        _mixed_sweep(cfg, "dense", params, sparsity=0.0,
-                     results=results, n_req=6, max_batch=2,
-                     new_tokens=9, prefill_chunk=4, reps=2)
+            _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
+                             results=results, n_batch=4, n_inter=3,
+                             batch_budget=13)
+        if not frontdoor_only:
+            _mixed_sweep(cfg, "dense", params, sparsity=0.0,
+                         results=results, n_req=6, max_batch=2,
+                         new_tokens=9, prefill_chunk=4, reps=2)
     else:
         cfg = bench_cfg(num_layers=2)
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
@@ -481,8 +739,14 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
                      results=results)
         _mixed_sweep(scfg, "packed_s90", packed, sparsity=0.9,
                      results=results)
+        # ---- multi-tenant trace: FIFO vs SLA vs SLA+preemption
+        _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
+                         results=results)
+        _frontdoor_sweep(scfg, "packed_s90", packed, sparsity=0.9,
+                         results=results)
 
-    artifact = {"bench": "serving", "smoke": smoke or mixed_only,
+    artifact = {"bench": "serving",
+                "smoke": smoke or mixed_only or frontdoor_only,
                 "rows": results}
     with open(out, "w") as f:
         json.dump(artifact, f, indent=2)
@@ -492,9 +756,17 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
         # hard asserts AFTER the artifact lands on disk, so the CI
         # upload preserves the measured rows even when parity breaks —
         # exactly the runs where the trajectory matters most
+        if frontdoor_only:
+            _check_frontdoor_guarantees(*check)
+            _check_no_starvation(*check)
+            _check_async_guarantees(*check)
+            return
         if not mixed_only:
             _check_paged_guarantees(*check)
             _check_prefix_guarantees(*check)
+            _check_frontdoor_guarantees(*check)
+            _check_no_starvation(*check)
+            _check_async_guarantees(*check)
         _check_mixed_guarantees(*check)
 
 
@@ -506,6 +778,11 @@ if __name__ == "__main__":
     ap.add_argument("--mixed-only", action="store_true",
                     help="just the mixed-vs-phased continuous-arrival "
                          "sweep + its hard asserts (CI mixed-smoke job)")
+    ap.add_argument("--frontdoor-only", action="store_true",
+                    help="just the FIFO-vs-SLA-vs-preempt front-door "
+                         "sweep + async/SLA/no-starvation hard asserts "
+                         "(CI async-smoke job)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
-    main(smoke=args.smoke, out=args.out, mixed_only=args.mixed_only)
+    main(smoke=args.smoke, out=args.out, mixed_only=args.mixed_only,
+         frontdoor_only=args.frontdoor_only)

@@ -6,8 +6,15 @@ back to the token-by-token ``serve_loop`` oracle.
 
     PYTHONPATH=src python examples/serve_sparse.py --arch stablelm-3b \
         [--ragged] [--max-batch 2]
+
+``--frontdoor`` serves the PACKED model through the asyncio front door
+instead (production API): SLA priority classes + preemption with host
+KV offload, interactive requests streaming in over a saturated batch
+tier — prints the per-class TTFT split and the offload counters (see
+launch/serve.py for the full launcher).
 """
 import argparse
+import asyncio
 import dataclasses
 import time
 
@@ -20,6 +27,61 @@ from repro.core import sparse_mlp as sm
 from repro.core.prune_grow import initial_mask
 from repro.models import registry
 from repro.serving import engine, export, serve_loop
+from repro.serving.frontend import AsyncEngine
+from repro.serving.scheduler import BATCH, INTERACTIVE, SLAScheduler
+
+
+def frontdoor(cfg, packed, args):
+    """Serve the packed model behind the async production API: batch
+    jobs saturate the lanes, interactive requests arrive live and jump
+    the queue (preempting a batch lane's KV to host when the page pool
+    is the bottleneck)."""
+    rng = np.random.default_rng(0)
+    sched = SLAScheduler(args.max_batch or 2, 96, aging_s=30.0)
+    eng = engine.Engine(cfg, packed, max_batch=args.max_batch or 2,
+                        max_len=96, slab_k=args.slab_k, page_size=8,
+                        scheduler=sched, preempt=True)
+    # jit-warm outside the served trace
+    eng.submit(np.ones(16, np.int32), 4, priority=BATCH)
+    eng.submit(np.ones(6, np.int32), 4, priority=INTERACTIVE)
+    eng.run()
+    eng.reset_stats()
+
+    lat = {BATCH: [], INTERACTIVE: []}
+
+    async def one(front, prompt, tokens, klass, *, delay=0.0, **kw):
+        # TTFT from BEFORE the submit: ack latency and queue wait both
+        # count, as a served client would experience them
+        await asyncio.sleep(delay)
+        t0 = time.monotonic()
+        stream = await front.submit_async(prompt, tokens, priority=klass,
+                                          **kw)
+        async for _ in stream:
+            lat[klass].append(time.monotonic() - t0)
+            break
+        await stream.result()
+
+    async def run():
+        async with AsyncEngine(eng) as front:
+            tasks = [one(front,
+                         rng.integers(0, cfg.vocab_size, 24)
+                         .astype(np.int32),
+                         args.new_tokens, BATCH) for _ in range(4)]
+            tasks += [one(front,
+                          rng.integers(0, cfg.vocab_size, 8)
+                          .astype(np.int32),
+                          8, INTERACTIVE, delay=(k + 1) * 0.5,
+                          deadline_s=0.5) for k in range(6)]
+            await asyncio.gather(*tasks)
+
+    asyncio.run(run())
+    for name, klass in (("interactive", INTERACTIVE), ("batch", BATCH)):
+        t = np.array(lat[klass])
+        print(f"{name:>12}: ttft p50={np.percentile(t, 50) * 1e3:7.1f}ms "
+              f"p95={np.percentile(t, 95) * 1e3:7.1f}ms")
+    print(f"{'engine':>12}: {eng.stats['e2e_tok_per_s']:.1f} tok/s, "
+          f"preemptions={eng.stats['preemptions']} "
+          f"offloaded_pages={eng.stats['offloaded_pages']}")
 
 
 def main():
@@ -41,6 +103,10 @@ def main():
                     help="stall-free mixed batching: fuse chunked "
                          "prefill into the decode step under the "
                          "prefill token budget")
+    ap.add_argument("--frontdoor", action="store_true",
+                    help="serve the packed model through the asyncio "
+                         "front door (SLA classes + preemption with "
+                         "host KV offload) and print per-class TTFT")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -56,6 +122,16 @@ def main():
         for _ in range(w.ndim - 2):
             fn = jax.vmap(fn)
         masks[path] = fn(w)
+
+    if args.frontdoor:
+        if not registry.supports_prefill_chunk(cfg):
+            raise SystemExit(
+                f"--frontdoor needs an engine-servable family; "
+                f"{cfg.family!r} is not")
+        packed = export.pack_params(cfg, params, masks,
+                                    dtype=jnp.float32)
+        frontdoor(cfg, packed, args)
+        return
 
     rng = np.random.default_rng(0)
     use_engine = registry.supports_prefill_chunk(cfg)

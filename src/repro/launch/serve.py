@@ -7,11 +7,26 @@ reuse. ``--oracle`` falls back to the token-by-token
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
         --smoke --prompt-len 16 --new-tokens 32 --batch 4 [--packed] \
         [--max-batch 2] [--ragged] [--prefill-chunk 8]
+
+``--frontdoor`` serves a live multi-tenant trace through the asyncio
+production API instead (``serving/frontend.py``): a batch tier queued
+up front, interactive requests arriving mid-decode with an SLA
+deadline; ``--sla`` orders admission by priority class (with the
+anti-starvation aging bound) and ``--preempt`` lets a page-blocked
+interactive head preempt batch lanes — their KV pages round-trip
+through host RAM (``serving/offload.py``) and decoding resumes at the
+saved frontier, never re-prefilling. Prints the per-class TTFT split
+and the preemption/offload counters:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-3b \
+        --smoke --frontdoor --sla --preempt --batch 4 --n-inter 6
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +76,27 @@ def main():
                          "KV pages across requests (refcounted, "
                          "copy-on-write boundary pages, LRU eviction; "
                          "paged mode only)")
+    ap.add_argument("--frontdoor", action="store_true",
+                    help="serve a live interactive+batch trace through "
+                         "the asyncio front door (serving/frontend.py) "
+                         "and print the per-class TTFT split")
+    ap.add_argument("--sla", action="store_true",
+                    help="SLA-class admission (SLAScheduler): "
+                         "interactive requests jump the batch tier, "
+                         "aged batch requests never starve")
+    ap.add_argument("--preempt", action="store_true",
+                    help="preempt lower-priority lanes for a blocked "
+                         "urgent head: KV pages offload to host RAM "
+                         "and restore on readmission (no re-prefill)")
+    ap.add_argument("--aging-s", type=float, default=30.0,
+                    help="anti-starvation aging period (--sla)")
+    ap.add_argument("--n-inter", type=int, default=6,
+                    help="interactive arrivals in the frontdoor trace")
+    ap.add_argument("--inter-tokens", type=int, default=8)
+    ap.add_argument("--inter-gap-s", type=float, default=0.5,
+                    help="gap between interactive arrivals")
+    ap.add_argument("--deadline-s", type=float, default=0.5,
+                    help="interactive SLA deadline (EDF within class)")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -98,6 +134,12 @@ def main():
     print("serving memory:", export.memory_report(cfg, params))
 
     rng = np.random.default_rng(0)
+    if args.frontdoor:
+        if not registry.supports_prefill_chunk(cfg):
+            raise SystemExit(f"--frontdoor needs an engine-servable "
+                             f"family; {cfg.family!r} is not")
+        _frontdoor(cfg, params, args, rng)
+        return
     if args.oracle or not registry.supports_prefill_chunk(cfg):
         prompts = jnp.asarray(rng.integers(
             0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
@@ -133,6 +175,88 @@ def main():
              if args.mixed else ""))
     for p, t in list(zip(prompts, toks))[:2]:
         print(t[p.size:])
+
+
+def _frontdoor(cfg, params, args, rng):
+    """The asyncio front door over a live multi-tenant trace: batch
+    jobs saturate the lanes, interactive requests trickle in and (with
+    --sla / --preempt) jump the queue or preempt a batch lane's KV to
+    host. Streams are consumed concurrently; per-class TTFT is measured
+    from each request's own submission."""
+    from repro.serving.engine import Engine
+    from repro.serving.frontend import AsyncEngine
+    from repro.serving.scheduler import (BATCH, INTERACTIVE,
+                                         FIFOScheduler, SLAScheduler)
+
+    max_batch = args.max_batch or 2
+    max_len = max(args.prompt_len + args.new_tokens + 8, 32)
+
+    def build():
+        sched = (SLAScheduler(max_batch, max_len, aging_s=args.aging_s)
+                 if args.sla else FIFOScheduler(max_batch, max_len))
+        return Engine(cfg, params, max_batch=max_batch, max_len=max_len,
+                      prefill_chunk=args.prefill_chunk,
+                      slab_k=args.slab_k, page_size=args.page_size,
+                      n_pages=args.n_pages or None, scheduler=sched,
+                      mixed=args.mixed, preempt=args.preempt)
+
+    # jit-warm both request shapes outside the served trace
+    warm = build()
+    warm.submit(np.ones(args.prompt_len, np.int32), 4, priority=BATCH)
+    warm.submit(np.ones(max(args.prompt_len // 2, 1), np.int32), 4,
+                priority=INTERACTIVE)
+    warm.run()
+
+    eng = build()
+    lat = {"batch": [], "interactive": []}
+
+    async def one(front, prompt, tokens, klass, *, delay=0.0, **kw):
+        """One client: wait for its arrival time, submit, stream.
+        TTFT is measured from BEFORE the submit — ack latency (the
+        engine thread drains its inbox between steps) and queue wait
+        both count, as a served client would experience them."""
+        await asyncio.sleep(delay)
+        t0 = time.monotonic()
+        stream = await front.submit_async(prompt, tokens, **kw)
+        first = None
+        async for _ in stream:
+            if first is None:
+                first = time.monotonic() - t0
+        await stream.result()
+        lat[klass].append((first, time.monotonic() - t0))
+
+    async def drive():
+        async with AsyncEngine(eng) as front:
+            tasks = []
+            for _ in range(args.batch):
+                p = rng.integers(0, cfg.vocab_size, args.prompt_len)
+                tasks.append(one(front, p.astype(np.int32),
+                                 args.new_tokens, "batch",
+                                 priority=BATCH))
+            for k in range(args.n_inter):
+                p = rng.integers(0, cfg.vocab_size,
+                                 max(args.prompt_len // 2, 1))
+                tasks.append(one(front, p.astype(np.int32),
+                                 args.inter_tokens, "interactive",
+                                 delay=(k + 1) * args.inter_gap_s,
+                                 priority=INTERACTIVE,
+                                 deadline_s=args.deadline_s))
+            await asyncio.gather(*tasks)
+
+    asyncio.run(drive())
+    for klass in ("interactive", "batch"):
+        ttft = np.array([t for t, _ in lat[klass]])
+        e2e = np.array([e for _, e in lat[klass]])
+        print(f"{klass:>12}: n={len(ttft)} "
+              f"ttft p50={np.percentile(ttft, 50) * 1e3:7.1f}ms "
+              f"p95={np.percentile(ttft, 95) * 1e3:7.1f}ms   "
+              f"e2e p95={np.percentile(e2e, 95) * 1e3:7.1f}ms")
+    st = eng.stats
+    print(f"{'engine':>12}: {st['e2e_tok_per_s']:.1f} tok/s e2e, "
+          f"preemptions={st['preemptions']} restores={st['restores']} "
+          f"offloaded_pages={st['offloaded_pages']} "
+          f"offload_bytes_peak={st['offload_bytes_peak']:,} "
+          f"stalled_decode_steps={st['stalled_decode_steps']}")
 
 
 if __name__ == "__main__":

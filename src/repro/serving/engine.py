@@ -97,15 +97,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.serving.offload import HostKVStore
 from repro.serving.pages import PagePool
 from repro.serving.prefix_cache import Match, PrefixCache
 from repro.serving.scheduler import FIFOScheduler, Request
 from repro.serving.step import (make_copy_pages_step,
                                 make_decode_slab_step,
+                                make_gather_pages_step,
                                 make_mixed_step,
                                 make_paged_decode_slab_step,
                                 make_paged_prefill_chunk_step,
-                                make_prefill_chunk_step)
+                                make_prefill_chunk_step,
+                                make_scatter_pages_step)
 
 
 @dataclasses.dataclass
@@ -131,6 +134,25 @@ class _Lane:
     # host-sync timestamp of each generated token (TTFT / inter-token
     # latency observability; tokens folded at one sync share it)
     token_times: list[float] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """A lane frozen off-device: everything needed to resume decode at
+    the saved frontier with zero re-prefill. Exclusively owned pages
+    went to the host offload store (keyed by ``req.uid``);
+    prefix-shared pages stayed pinned on-device (``pinned``: logical
+    block-table index -> pool page, reference HELD through the
+    preemption)."""
+    req: Request
+    offset: int
+    generated: list[int]
+    token_times: list[float]
+    pending: int               # next token to feed (KV not yet written)
+    frontier: int              # cache slot decode resumes at
+    remaining: int             # decode budget left
+    n_pages: int               # logical pages the block table covered
+    pinned: dict[int, int]
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -186,7 +208,8 @@ class Engine:
                  paged: bool = True, page_size: int = 16,
                  n_pages: int | None = None, attn_backend: str = "xla",
                  prefix_cache: bool = False, mixed: bool = False,
-                 prefill_token_budget: int | None = None):
+                 prefill_token_budget: int | None = None,
+                 preempt: bool = False, offload_store=None):
         if not registry.supports_prefill_chunk(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} is not KV-cache servable by the "
@@ -206,6 +229,9 @@ class Engine:
             raise NotImplementedError(
                 f"family {cfg.family!r} has no mixed decode+prefill "
                 "step; pass mixed=False")
+        if preempt and not paged:
+            raise ValueError("preempt=True requires paged=True (pages "
+                             "are the unit of offload)")
         assert slab_k >= 1
         self.cfg = cfg
         self.params = params
@@ -216,8 +242,13 @@ class Engine:
         self.eos_id = eos_id
         self.paged = paged
         self.mixed = mixed
-        self.scheduler = scheduler or FIFOScheduler(
-            max_batch, max_len, prefill_token_budget=prefill_token_budget)
+        # NOT ``scheduler or ...``: schedulers define __len__, and an
+        # empty (freshly built) one is falsy — ``or`` would silently
+        # swap a caller's SLAScheduler for a new FIFO
+        self.scheduler = (scheduler if scheduler is not None
+                          else FIFOScheduler(
+                              max_batch, max_len,
+                              prefill_token_budget=prefill_token_budget))
         if prefill_token_budget is not None:
             self.scheduler.prefill_token_budget = prefill_token_budget
         elif getattr(self.scheduler, "prefill_token_budget", None) is None:
@@ -239,6 +270,12 @@ class Engine:
             "live": np.zeros(max_batch, bool),
         }
         self.pcache: PrefixCache | None = None
+        # lanes frozen off-device by preemption, awaiting restore (any
+        # paged engine can be preempted explicitly via ``preempt()``;
+        # ``preempt=True`` additionally lets admission preempt
+        # lower-priority lanes for a page-blocked urgent head)
+        self.preempt_enabled = preempt
+        self._preempted: list[_Preempted] = []
         if paged:
             self.page_size = page_size
             per_lane = -(-max_len // page_size)
@@ -253,6 +290,17 @@ class Engine:
                 self._copy_pages = jax.jit(make_copy_pages_step())
             self._mirror["bt"] = np.zeros((max_batch, self.max_pages),
                                           np.int32)
+            # preemption plumbing: host store for offloaded page KV and
+            # the jitted device<->host page movers (pow2-padded index
+            # vectors keep the jit cache O(log max_pages))
+            self._offload = (offload_store if offload_store is not None
+                             else HostKVStore())
+            self._gather = jax.jit(make_gather_pages_step())
+            self._scatter = jax.jit(make_scatter_pages_step())
+            # page-unit feasibility moves INTO the scheduler's submit
+            # gate so slot- and page-infeasible requests both reject
+            # synchronously at submit with a consistent error
+            self.scheduler.feasibility = self._check_feasible
             self._prefill = jax.jit(
                 make_paged_prefill_chunk_step(cfg, dist=dist),
                 static_argnames=("read_pages",))
@@ -309,11 +357,23 @@ class Engine:
                       # computed, the difference the radix-tree hits
                       "prompt_tokens": 0, "prefix_hits": 0,
                       "prefix_misses": 0, "prefill_tokens_skipped": 0,
-                      "cow_copies": 0, "cache_evicted_pages": 0}
+                      "cow_copies": 0, "cache_evicted_pages": 0,
+                      # preemption/offload accounting: lanes frozen and
+                      # resumed, pages round-tripped through host RAM
+                      # (vs pinned-shared pages that never left), and
+                      # the host store's bytes high-water
+                      "preemptions": 0, "restores": 0,
+                      "offloaded_pages": 0, "restored_pages": 0,
+                      "preempt_pinned_pages": 0, "offload_bytes_peak": 0,
+                      # page-gate accounting: distinct blocked heads
+                      # (admission_rejections) vs blocked steps
+                      "admission_rejected_steps": 0}
         if hasattr(self.scheduler, "reset_stats"):
             self.scheduler.reset_stats()
         if getattr(self, "pool", None) is not None:
             self.pool.reset_peaks()
+        if getattr(self, "_offload", None) is not None:
+            self._offload.reset_peaks()
 
     # ------------------------------------------------------------- memory
     @property
@@ -341,27 +401,41 @@ class Engine:
 
     # ------------------------------------------------------------ submit
     def submit(self, prompt, max_new_tokens: int = 32,
-               uid: int | None = None) -> int:
+               uid: int | None = None, *, priority: int = 0,
+               deadline_s: float | None = None) -> int:
+        """Queue one request. ``priority`` is the SLA class (smaller =
+        more urgent; only ordering-relevant when the engine runs an
+        ``SLAScheduler``) and ``deadline_s`` an optional target latency
+        — see serving/scheduler.py. Infeasible requests (no decode
+        headroom under ``max_len``, or a paged extent the pool could
+        never hold) raise ``ValueError`` HERE, synchronously: the
+        scheduler's submit gate runs both checks (``_check_feasible``
+        is installed as its feasibility hook), so a request never
+        queues only to surface an error later."""
         uid = self._uid if uid is None else uid
         self._uid = max(self._uid, uid) + 1
-        req = Request(uid, np.asarray(prompt), max_new_tokens)
-        if self.paged and req.prompt_len < self.max_len:
-            # (prompts with no decode headroom at max_len fall through
-            # to the scheduler's own slot-units rejection below)
-            need = self._page_cost([req])
-            if need > self.n_pages:
-                raise ValueError(
-                    f"oversized request: prompt of {req.prompt_len} "
-                    f"tokens + budget of {max_new_tokens} new tokens "
-                    f"needs {need} pages ({self.page_size} slots each) "
-                    f"even admitted alone, but the pool holds only "
-                    f"{self.n_pages} pages "
-                    f"({self.n_pages * self.page_size} cache slots) — "
-                    "shrink the request or grow n_pages")
+        req = Request(uid, np.asarray(prompt), max_new_tokens,
+                      priority=priority, deadline_s=deadline_s)
         self.scheduler.submit(req)
         self.stats["queue_depth_peak"] = max(
             self.stats["queue_depth_peak"], len(self.scheduler))
         return uid
+
+    def _check_feasible(self, req: Request) -> None:
+        """Page-unit submit gate (paged engines), installed on the
+        scheduler as its ``feasibility`` hook: runs after the slot gate
+        (so ``prompt_len < max_len`` already holds) and rejects a
+        request whose solo extent could never fit the pool."""
+        need = self._page_cost([req])
+        if need > self.n_pages:
+            raise ValueError(
+                f"oversized request: prompt of {req.prompt_len} "
+                f"tokens + budget of {req.max_new_tokens} new tokens "
+                f"needs {need} pages ({self.page_size} slots each) "
+                f"even admitted alone, but the pool holds only "
+                f"{self.n_pages} pages "
+                f"({self.n_pages * self.page_size} cache slots) — "
+                "shrink the request or grow n_pages")
 
     # ------------------------------------------------------- lane helpers
     @property
@@ -483,6 +557,192 @@ class Engine:
                          np.asarray(lane.generated, np.int32), truncated,
                          ttft_s=ttft)
 
+    # ---------------------------------------------------------- preemption
+    def _download_pages(self, pages: list[int]):
+        """Device -> host pull of ``pages`` (physical indices), padded
+        to a power-of-two gather width so the jit cache stays
+        O(log max_pages); the pad rows are sliced off on the host."""
+        n = len(pages)
+        w = 1 << max(0, (n - 1).bit_length())
+        idx = np.asarray(pages + [pages[0]] * (w - n), np.int32)
+        k, v = self._gather(self.cache, jnp.asarray(idx))
+        k = np.asarray(jax.block_until_ready(k))[:, :n].copy()
+        v = np.asarray(v)[:, :n].copy()
+        return k, v
+
+    def _upload_pages(self, dst: list[int], k: np.ndarray,
+                      v: np.ndarray) -> None:
+        """Host -> device scatter of offloaded page KV into freshly
+        allocated pages ``dst``. Power-of-two padding repeats the first
+        page WITH its own data — duplicate scatter indices then write
+        identical values, a no-op."""
+        n = len(dst)
+        w = 1 << max(0, (n - 1).bit_length())
+        if w > n:
+            dst = dst + [dst[0]] * (w - n)
+            k = np.concatenate([k] + [k[:, :1]] * (w - n), axis=1)
+            v = np.concatenate([v] + [v[:, :1]] * (w - n), axis=1)
+        self.cache = self._scatter(self.cache, jnp.asarray(dst, np.int32),
+                                   jnp.asarray(k), jnp.asarray(v))
+
+    def preempt(self, i: int) -> None:
+        """Freeze lane ``i`` off-device: download its exclusively owned
+        LIVE pages (slots ``[0, frontier)``) to the host offload store,
+        keep prefix-shared/cached pages pinned on-device (their
+        refcount keeps the KV alive for the other readers — they are
+        NEVER offloaded while shared), and release everything releasable
+        (downloaded pages + the garbage extent past the frontier) to
+        the pool. The lane's decode state (pending token, frontier,
+        remaining budget) is saved so restore resumes with zero
+        re-prefilled tokens — bitwise-identical greedy continuation
+        (tests/test_preemption.py).
+
+        Only live decode lanes preempt: a lane mid-prefill holds no
+        resumable decode state worth offloading (evicting it would mean
+        re-prefill, exactly what preemption exists to avoid)."""
+        assert self.paged, "preemption requires the paged engine"
+        lane = self.lanes[i]
+        assert lane is not None and i not in self._prefilling, \
+            f"lane {i} is not preemptible"
+        m = self._mirror
+        assert bool(m["live"][i]), "only live decode lanes preempt"
+        n_live = self.pool.slots_for(int(m["frontier"][i]))
+        dl_logical: list[int] = []
+        dl_pages: list[int] = []
+        pinned: dict[int, int] = {}
+        for j in range(n_live):
+            p = lane.pages[j]
+            if self.pool.exclusive(p):
+                dl_logical.append(j)
+                dl_pages.append(p)
+            else:
+                pinned[j] = p            # reference HELD through preempt
+        if dl_pages:
+            k, v = self._download_pages(dl_pages)
+            self._offload.save(lane.req.uid, dl_logical, k, v)
+            self.stats["offloaded_pages"] += len(dl_pages)
+            self.stats["offload_bytes_peak"] = max(
+                self.stats["offload_bytes_peak"], self._offload.bytes_peak)
+        self.stats["preempt_pinned_pages"] += len(pinned)
+        # garbage extent pages (past the frontier) free without download
+        # — they are never shared: sharing covers at most the prompt,
+        # and a live lane's frontier is at least its prompt width
+        self.pool.release(dl_pages + lane.pages[n_live:])
+        self._preempted.append(_Preempted(
+            req=lane.req, offset=lane.offset, generated=lane.generated,
+            token_times=lane.token_times, pending=int(m["pending"][i]),
+            frontier=int(m["frontier"][i]),
+            remaining=int(m["remaining"][i]), n_pages=len(lane.pages),
+            pinned=pinned))
+        self.lanes[i] = None
+        m["live"][i] = False
+        m["bt"][i] = 0
+        self._dirty = True
+        self.stats["preemptions"] += 1
+
+    def _restore_one(self, pre: _Preempted) -> bool:
+        """Re-admit one preempted lane: alloc fresh pages for every
+        logical slot that was offloaded (or garbage), interleave the
+        still-pinned shared pages at their logical positions, scatter
+        the host KV back, and rebuild the lane at the saved frontier.
+        False when no lane is free or the pool can't cover it yet."""
+        free = [i for i, l in enumerate(self.lanes) if l is None]
+        if not free:
+            return False
+        own_need = pre.n_pages - len(pre.pinned)
+        if self.pcache is not None:
+            short = own_need - self.pool.free_pages
+            if short > 0:
+                self.stats["cache_evicted_pages"] += \
+                    self.pcache.evict(short)
+        if own_need > self.pool.free_pages:
+            return False
+        i = free[0]
+        own = iter(self.pool.alloc(own_need))
+        pages = [pre.pinned[j] if j in pre.pinned else next(own)
+                 for j in range(pre.n_pages)]
+        rec = self._offload.pop(pre.req.uid)
+        if rec is not None:   # None: every live page was pinned-shared
+            dst = [pages[j] for j in rec.logical]
+            self._upload_pages(dst, rec.k, rec.v)
+            self.stats["restored_pages"] += len(dst)
+        self.lanes[i] = _Lane(pre.req, pre.offset, pre.generated,
+                              pages=pages, token_times=pre.token_times)
+        m = self._mirror
+        m["bt"][i] = 0
+        m["bt"][i, :len(pages)] = pages
+        m["offsets"][i] = pre.offset
+        m["frontier"][i] = pre.frontier
+        m["remaining"][i] = pre.remaining
+        m["pending"][i] = pre.pending
+        m["live"][i] = True
+        self._dirty = True
+        self.stats["restores"] += 1
+        return True
+
+    def _try_restore(self) -> None:
+        """Readmit preempted lanes, most urgent first, unless the queue
+        head outranks them (then lanes/pages stay reserved for it —
+        restoring a batch lane just to preempt it again would thrash).
+        Head-of-line within the preempted set: a lane that does not fit
+        yet blocks the less urgent ones behind it."""
+        if not self._preempted:
+            return
+        self._preempted.sort(key=lambda p: (p.req.priority, p.req._seq))
+        while self._preempted:
+            head = self.scheduler.head()
+            if (head is not None
+                    and head.priority < self._preempted[0].req.priority):
+                return
+            if not self._restore_one(self._preempted[0]):
+                return
+            self._preempted.pop(0)
+
+    def _releasable(self, i: int) -> int:
+        """Pages preempting lane ``i`` would actually return to the
+        pool (its exclusively owned ones; pinned-shared pages stay)."""
+        return sum(1 for p in self.lanes[i].pages
+                   if self.pool.exclusive(p))
+
+    def _shortfall(self, head: Request) -> int:
+        """Pages the queue head still needs beyond what the pool can
+        provide right now (mode-aware: prefix-shared admission counts
+        effective cost against free + reclaimable-cached)."""
+        if self.pcache is not None:
+            return (self._page_cost_shared()([head])
+                    - self.pool.free_pages - self.pcache.reclaimable())
+        return self._page_cost([head]) - self.pool.free_pages
+
+    def _preempt_for_head(self) -> bool:
+        """Make room for a more urgent page- or lane-blocked queue head
+        by preempting strictly-lower-priority live lanes, least urgent
+        (then latest-arrived) first. Stops as soon as the head fits, no
+        candidate remains, or the next preemption would gain nothing
+        (short of pages but the victim has none to release). Returns
+        True when at least one lane was preempted (the caller re-runs
+        admission)."""
+        head = self.scheduler.head()
+        if head is None:
+            return False
+        did = False
+        while True:
+            free_lane = any(l is None for l in self.lanes)
+            short = self._shortfall(head)
+            if free_lane and short <= 0:
+                return did
+            cands = [i for i in self.active_lanes
+                     if bool(self._mirror["live"][i])
+                     and i not in self._prefilling
+                     and self.lanes[i].req.priority > head.priority]
+            if not cands:
+                return did
+            victim = max(cands, key=lambda i: (self.lanes[i].req.priority,
+                                               self.lanes[i].req._seq))
+            if free_lane and short > 0 and self._releasable(victim) == 0:
+                return did
+            self.preempt(victim)
+            did = True
+
     # ----------------------------------------------------------- admission
     def _note_admitted(self, reqs: list[Request]) -> None:
         now = time.monotonic()
@@ -493,6 +753,16 @@ class Engine:
         self.stats["admitted"] += len(reqs)
 
     def _admit(self) -> None:
+        """Admission, with preemption as the fallback: when the plain
+        pass leaves a queue head behind and ``preempt=True``, try to
+        free lanes/pages by preempting strictly-lower-priority lanes,
+        then admit again."""
+        self._admit_once()
+        if (self.paged and self.preempt_enabled and len(self.scheduler)
+                and self._preempt_for_head()):
+            self._admit_once()
+
+    def _admit_once(self) -> None:
         free = [i for i, l in enumerate(self.lanes) if l is None]
         if self.pcache is not None:
             self._admit_shared(free)
@@ -750,6 +1020,8 @@ class Engine:
         requests finished during this step."""
         finished: list[GenResult] = []
         self._sweep_finished(finished)
+        if self._preempted:
+            self._try_restore()    # older work first, unless outranked
         self._admit()
         self._sweep_finished(finished)   # e.g. max_new_tokens == 1
         if self.mixed:
@@ -909,7 +1181,8 @@ class Engine:
     def run(self) -> dict[int, GenResult]:
         """Drain the queue and all active lanes; {uid: GenResult}."""
         out: dict[int, GenResult] = {}
-        while len(self.scheduler) or self.active_lanes:
+        while (len(self.scheduler) or self.active_lanes
+               or self._preempted):
             for r in self.step():
                 out[r.uid] = r
         self.finalize_stats()
@@ -953,6 +1226,8 @@ class Engine:
             self.kv_bytes_contiguous_equiv
         self.stats["admission_rejections"] = getattr(
             self.scheduler, "rejections", 0)
+        self.stats["admission_rejected_steps"] = getattr(
+            self.scheduler, "rejected_steps", 0)
         if self.pcache is not None:
             self.stats["prefix_hit_rate"] = (
                 self.stats["prefill_tokens_skipped"]

@@ -1,0 +1,252 @@
+"""Asyncio front door over the serving engine (the production API).
+
+The engine itself is a synchronous step loop — by design: every jitted
+call blocks, and bitwise parity with the oracle is proven against the
+stepped form (engine.py). This module makes it servable behind real
+traffic without touching that core: ONE dedicated thread steps the
+engine continuously, an asyncio facade submits requests into it and
+streams tokens back out as slabs / mixed steps complete.
+
+    async with AsyncEngine(engine) as front:
+        stream = await front.submit_async(prompt, max_new_tokens=64)
+        async for toks in stream:      # list[int] per engine sync
+            ...
+        res = await stream.result()    # the engine's GenResult
+
+Concurrency model — deliberately minimal, no locks:
+
+  * the EVENT LOOP side only appends to a plain deque inbox and sets a
+    ``threading.Event`` (both atomic under the GIL) — ``submit_async``
+    never blocks the loop on engine work;
+  * the ENGINE THREAD owns the engine exclusively: it drains the inbox
+    (calling ``engine.submit`` — infeasible requests reject there and
+    the error is routed back through the caller's future), steps the
+    engine while any work is in flight, and pushes newly generated
+    tokens to each request's stream;
+  * every hop back to the loop goes through
+    ``loop.call_soon_threadsafe`` — the ONLY asyncio-sanctioned
+    cross-thread entry point.
+
+Tokens stream per-request with slab granularity: the engine syncs the
+host once per decode slab (``slab_k`` tokens) or mixed step, so that is
+the natural flush unit — each ``__anext__`` yields the batch of tokens
+that landed at one sync. Backpressure is the engine's own admission
+control (lanes + page gate + SLA scheduler); the front end adds none.
+
+``await front.aclose()`` (or leaving the ``async with``) drains all
+in-flight work, then joins the thread and finalizes engine stats —
+``engine.stats`` is complete afterwards.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+from collections import deque
+
+import numpy as np
+
+_DONE = object()
+
+
+class TokenStream:
+    """One request's async token stream + final result.
+
+    Async-iterating yields ``list[int]`` batches (one per engine host
+    sync — slab-granular); ``await stream.result()`` returns the
+    engine's ``GenResult`` once the request finishes. Created by
+    ``AsyncEngine.submit_async``; all mutation happens on the engine
+    thread through the ``*_threadsafe`` methods."""
+
+    def __init__(self, loop: asyncio.AbstractEventLoop):
+        self._loop = loop
+        self._q: asyncio.Queue = asyncio.Queue()
+        self._submitted = loop.create_future()   # -> uid, or raises
+        self._result = loop.create_future()      # -> GenResult
+
+    @property
+    def uid(self) -> int:
+        """Engine-assigned request uid (valid once submitted)."""
+        return self._submitted.result()
+
+    # ---- engine-thread side (cross-thread via call_soon_threadsafe)
+    def _call(self, fn) -> None:
+        try:
+            self._loop.call_soon_threadsafe(fn)
+        except RuntimeError:
+            pass   # loop already closed: the consumer is gone
+
+    def _submit_ok_threadsafe(self, uid: int) -> None:
+        self._call(lambda: self._submitted.set_result(uid))
+
+    def _reject_threadsafe(self, exc: BaseException) -> None:
+        # submit-time rejection (infeasible request): the exception
+        # surfaces from ``await submit_async`` — the stream is never
+        # handed to the caller, so the result future just closes
+        def fail():
+            self._submitted.set_exception(exc)
+            if not self._result.done():
+                self._result.set_result(None)
+            self._q.put_nowait(_DONE)
+        self._call(fail)
+
+    def _push_threadsafe(self, toks: list[int]) -> None:
+        self._call(lambda: self._q.put_nowait(list(toks)))
+
+    def _finish_threadsafe(self, res) -> None:
+        def fin():
+            if not self._result.done():
+                self._result.set_result(res)
+            self._q.put_nowait(_DONE)
+        self._call(fin)
+
+    def _fail_threadsafe(self, exc: BaseException) -> None:
+        # engine-thread crash mid-run: every open stream raises
+        def fail():
+            if not self._submitted.done():
+                self._submitted.set_exception(exc)
+            if not self._result.done():
+                self._result.set_exception(exc)
+            self._q.put_nowait(_DONE)
+        self._call(fail)
+
+    # ---- event-loop side
+    def __aiter__(self) -> "TokenStream":
+        return self
+
+    async def __anext__(self) -> list[int]:
+        item = await self._q.get()
+        if item is _DONE:
+            raise StopAsyncIteration
+        return item
+
+    async def result(self):
+        """The engine's ``GenResult`` (awaits completion)."""
+        return await self._result
+
+
+class AsyncEngine:
+    """Asyncio facade stepping a serving ``Engine`` on its own thread.
+
+    The engine must not be driven by anyone else while the front end
+    owns it. ``idle_wait_s`` bounds the idle-poll latency between a
+    submission landing in the inbox and the thread noticing (the wake
+    event short-circuits it; the timeout is only the safety net)."""
+
+    def __init__(self, engine, *, idle_wait_s: float = 0.002):
+        self.engine = engine
+        self._idle_wait_s = idle_wait_s
+        # deque.append / popleft are GIL-atomic: the loop side appends,
+        # the engine thread pops — no lock needed
+        self._inbox: deque = deque()
+        self._wake = threading.Event()
+        self._stop = False
+        self._thread: threading.Thread | None = None
+        self._streams: dict[int, TokenStream] = {}
+        self._sent: dict[int, int] = {}   # uid -> tokens already pushed
+
+    # ------------------------------------------------------ lifecycle
+    def start(self) -> "AsyncEngine":
+        if self._thread is None:
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._run, name="serving-engine", daemon=True)
+            self._thread.start()
+        return self
+
+    async def __aenter__(self) -> "AsyncEngine":
+        return self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.aclose()
+
+    async def aclose(self) -> None:
+        """Drain all in-flight work, stop the engine thread, finalize
+        engine stats. Submissions after this raise."""
+        self._stop = True
+        self._wake.set()
+        if self._thread is not None:
+            loop = asyncio.get_running_loop()
+            await loop.run_in_executor(None, self._thread.join)
+            self._thread = None
+
+    # --------------------------------------------------------- submit
+    async def submit_async(self, prompt, max_new_tokens: int = 32, *,
+                           priority: int = 0,
+                           deadline_s: float | None = None) -> TokenStream:
+        """Queue one request; resolves once the engine accepted it (an
+        infeasible request raises ``ValueError`` here, synchronously
+        with the engine's own submit semantics). ``priority`` /
+        ``deadline_s`` pass through to the scheduler — see
+        serving/scheduler.py."""
+        if self._thread is None or self._stop:
+            raise RuntimeError(
+                "AsyncEngine is not running — use 'async with "
+                "AsyncEngine(engine)' or call start()")
+        stream = TokenStream(asyncio.get_running_loop())
+        self._inbox.append((np.asarray(prompt, np.int32), max_new_tokens,
+                            priority, deadline_s, stream))
+        self._wake.set()
+        await stream._submitted
+        return stream
+
+    # -------------------------------------------------- engine thread
+    def _drain_inbox(self) -> None:
+        eng = self.engine
+        while self._inbox:
+            prompt, mnt, prio, dl, stream = self._inbox.popleft()
+            try:
+                uid = eng.submit(prompt, mnt, priority=prio,
+                                 deadline_s=dl)
+            except Exception as e:
+                stream._reject_threadsafe(e)
+                continue
+            self._streams[uid] = stream
+            self._sent[uid] = 0
+            stream._submit_ok_threadsafe(uid)
+
+    def _pump(self, finished) -> None:
+        """Push tokens that landed at this step's host sync: the delta
+        of each live lane's ``generated`` past what was already sent
+        (preempted lanes simply pause — their counter survives until
+        restore), then the finished requests' tails + results."""
+        eng = self.engine
+        for i in eng.active_lanes:
+            lane = eng.lanes[i]
+            stream = self._streams.get(lane.req.uid)
+            if stream is None:
+                continue
+            n = len(lane.generated)
+            if n > self._sent[lane.req.uid]:
+                stream._push_threadsafe(
+                    lane.generated[self._sent[lane.req.uid]:n])
+                self._sent[lane.req.uid] = n
+        for res in finished:
+            stream = self._streams.pop(res.uid, None)
+            sent = self._sent.pop(res.uid, 0)
+            if stream is None:
+                continue
+            if len(res.generated) > sent:
+                stream._push_threadsafe(
+                    [int(t) for t in res.generated[sent:]])
+            stream._finish_threadsafe(res)
+
+    def _run(self) -> None:
+        eng = self.engine
+        try:
+            while True:
+                self._drain_inbox()
+                if (eng.active_lanes or len(eng.scheduler)
+                        or getattr(eng, "_preempted", None)):
+                    self._pump(eng.step())
+                elif self._stop and not self._inbox:
+                    break
+                else:
+                    self._wake.wait(self._idle_wait_s)
+                    self._wake.clear()
+        except BaseException as e:
+            for stream in list(self._streams.values()):
+                stream._fail_threadsafe(e)
+            self._streams.clear()
+            raise
+        finally:
+            eng.finalize_stats()

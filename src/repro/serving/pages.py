@@ -91,6 +91,14 @@ class PagePool:
     def refcount(self, page: int) -> int:
         return self._rc[page]
 
+    def exclusive(self, page: int) -> bool:
+        """True when ONE lane holds the page and the prefix cache does
+        not: releasing it frees the physical page, so its KV may be
+        offloaded to the host and the page handed to someone else. A
+        shared or cached page must stay pinned instead — other readers
+        (or future radix matches) still need its on-device KV."""
+        return self._rc[page] == 1 and not self._cached[page]
+
     def is_cached(self, page: int) -> bool:
         return self._cached[page]
 

@@ -12,29 +12,55 @@ a new prompt immediately — no waiting for the whole batch to drain
     (chunked batched prefill); the group's padding becomes each lane's
     position ``offset``.
 
-FIFO order — requests are popped strictly in submission order, up to the
-number of free lanes.
+Two schedulers share that contract:
+
+  * ``FIFOScheduler`` — strict submission order, the parity baseline;
+  * ``SLAScheduler``  — priority classes with deadline/arrival-aware
+    ordering inside a class and an anti-starvation aging bound, for
+    multi-tenant serving where interactive traffic must never sit
+    behind batch jobs (and batch jobs must never starve).
+
+Feasibility is checked ONCE, at ``submit``: the slot gate
+(``prompt_len`` must leave decode headroom under ``max_len``) plus an
+engine-installed ``feasibility`` hook (the paged engine's page-unit
+check) — a request that could never run is rejected synchronously with
+a consistent error instead of surfacing later from the queue.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
-from typing import Iterable
+from typing import Callable, Iterable
 
 import numpy as np
 
 
 @dataclasses.dataclass
 class Request:
-    """One generation request (prompt is a 1-D int32 array)."""
+    """One generation request (prompt is a 1-D int32 array).
+
+    ``priority`` is the SLA class — smaller is more urgent (0 =
+    interactive, higher integers = batch tiers); the FIFO scheduler
+    ignores it. ``deadline_s`` is an optional target latency relative
+    to submission: the SLA scheduler orders WITHIN a class by absolute
+    deadline (earliest first; requests without one come after, in
+    arrival order)."""
     uid: int
     prompt: np.ndarray
     max_new_tokens: int
+    priority: int = 0
+    deadline_s: float | None = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
-        self.queued_at = time.monotonic()   # for queued-time observability
+        # provisional stamp so a never-submitted Request still carries
+        # a timestamp; ``submit`` RE-stamps at enqueue — queued-time
+        # stats must measure queue residency, not object lifetime
+        self.queued_at = time.monotonic()
+        self.deadline_at: float | None = None
+        self._seq = -1                     # arrival order, set at submit
         if self.prompt.size == 0:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
@@ -58,32 +84,59 @@ class FIFOScheduler:
     admitting lanes (``plan_chunks``) — so a long prompt is prefilled
     incrementally across steps instead of monopolizing one, and decode
     is never stalled by an arriving prompt. ``None`` leaves the budget
-    to the engine's default (phased engines ignore it)."""
+    to the engine's default (phased engines ignore it).
+
+    ``clock`` injects the time source for queued-time stamping and
+    (in ``SLAScheduler``) aging — tests pass a fake; production uses
+    ``time.monotonic``."""
 
     def __init__(self, max_batch: int, max_len: int,
-                 prefill_token_budget: int | None = None):
+                 prefill_token_budget: int | None = None,
+                 clock: Callable[[], float] = time.monotonic):
         assert max_batch >= 1 and max_len >= 2
         assert prefill_token_budget is None or prefill_token_budget >= 1
         self.max_batch = max_batch
         self.max_len = max_len
         self.prefill_token_budget = prefill_token_budget
+        self.clock = clock
+        # engine-installed extra submit-time gate (the paged engine's
+        # page-unit check): callable(req) raising ValueError — so slot
+        # and page infeasibility BOTH reject synchronously at submit
+        self.feasibility: Callable[[Request], None] | None = None
         self._queue: deque[Request] = deque()
+        self._seq = 0
         self.reset_stats()
 
     def reset_stats(self):
-        # page-gate admission rejections: times the FIFO head had a free
-        # lane but the pool (free + reclaimable-cached) couldn't cover
-        # the group's effective page cost (engine.reset_stats resets)
+        # ``rejections``: DISTINCT page-gate blocked-head events — a
+        # head request that waits across many engine steps counts once
+        # until the head changes (uid-aware). ``rejected_steps``: every
+        # step the gate blocked the head (the old per-call semantics —
+        # a head waiting N steps adds N here and 1 to ``rejections``).
+        # engine.reset_stats resets both.
         self.rejections = 0
+        self.rejected_steps = 0
+        self._blocked_uid: int | None = None
 
     def __len__(self) -> int:
         return len(self._queue)
+
+    def head(self) -> Request | None:
+        """The request that would be admitted next (None when empty)."""
+        return self._queue[0] if self._queue else None
 
     def submit(self, req: Request):
         if req.prompt_len >= self.max_len:
             raise ValueError(
                 f"prompt of {req.prompt_len} tokens cannot fit max_len="
                 f"{self.max_len} with room to generate")
+        if self.feasibility is not None:
+            self.feasibility(req)
+        req.queued_at = self.clock()       # stamp at ENQUEUE, not ctor
+        req.deadline_at = (req.queued_at + req.deadline_s
+                           if req.deadline_s is not None else None)
+        req._seq = self._seq
+        self._seq += 1
         self._queue.append(req)
 
     def admit(self, n_free: int, free_pages: int | None = None,
@@ -101,15 +154,21 @@ class FIFOScheduler:
         shared from the radix tree cost nothing, and ``free_pages`` is
         free + reclaimable-cached). The prefix stops at the first
         request whose inclusion would overdraw ``free_pages`` — strict
-        FIFO, head-of-line blocking by design (the head is admitted as
+        order, head-of-line blocking by design (the head is admitted as
         soon as enough pages free up). A page-gated stop with lanes
-        still free counts as an admission rejection (``rejections``)."""
+        still free counts once per DISTINCT blocked head
+        (``rejections``) and once per blocked step
+        (``rejected_steps``)."""
         out: list[Request] = []
         while self._queue and len(out) < n_free:
             if page_cost is not None:
                 trial = out + [self._queue[0]]
                 if page_cost(trial) > free_pages:
-                    self.rejections += 1
+                    self.rejected_steps += 1
+                    head = self._queue[0]
+                    if head.uid != self._blocked_uid:
+                        self.rejections += 1
+                        self._blocked_uid = head.uid
                     break
             out.append(self._queue.popleft())
         return out
@@ -147,3 +206,78 @@ class FIFOScheduler:
     def extend(self, reqs: Iterable[Request]):
         for r in reqs:
             self.submit(r)
+
+
+# conventional SLA classes — any int works; smaller is more urgent
+INTERACTIVE = 0
+BATCH = 1
+
+
+class SLAScheduler(FIFOScheduler):
+    """Priority-class admission with deadline ordering and aging.
+
+    Ordering at every admission attempt (stable over arrival order):
+
+      1. **effective class** — ``req.priority`` minus one for every
+         full ``aging_s`` the request has waited. Promotion is
+         unbounded, so a waiting request eventually outranks EVERY
+         fresh arrival of every class: the anti-starvation bound — a
+         class-``p`` request is never left unadmitted once it has aged
+         ``(p + 1) * aging_s`` past the freshest competitor (the
+         no-starvation property test pins this down);
+      2. **deadline** within a class — earliest absolute deadline
+         first (EDF); requests without a deadline come after, so plain
+         workloads keep strict arrival order;
+      3. **arrival** — submission order breaks every remaining tie
+         (strict order within a class).
+
+    The page-gate semantics are inherited unchanged: ``admit`` pops the
+    prefix of the ORDERED queue and stops head-of-line at the first
+    request the pool cannot cover — so a page-blocked interactive head
+    still blocks the batch tier behind it (by design: the head is
+    admitted as soon as pages free up; the engine may preempt a
+    lower-priority lane to make that happen).
+
+    ``aging_s=None`` disables aging (pure class order — starvable under
+    sustained higher-priority pressure; keep the default for
+    production)."""
+
+    def __init__(self, max_batch: int, max_len: int,
+                 prefill_token_budget: int | None = None,
+                 aging_s: float | None = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        assert aging_s is None or aging_s > 0.0
+        super().__init__(max_batch, max_len,
+                         prefill_token_budget=prefill_token_budget,
+                         clock=clock)
+        self.aging_s = aging_s
+
+    def effective_priority(self, req: Request,
+                           now: float | None = None) -> int:
+        """Class after aging: drops one level per full ``aging_s``
+        waited, unboundedly (see class docstring)."""
+        if self.aging_s is None:
+            return req.priority
+        now = self.clock() if now is None else now
+        waited = max(0.0, now - req.queued_at)
+        return req.priority - int(waited // self.aging_s)
+
+    def _order(self) -> None:
+        now = self.clock()
+
+        def key(r: Request):
+            dl = r.deadline_at if r.deadline_at is not None else math.inf
+            return (self.effective_priority(r, now), dl, r._seq)
+
+        ordered = sorted(self._queue, key=key)
+        self._queue.clear()
+        self._queue.extend(ordered)
+
+    def head(self) -> Request | None:
+        self._order()
+        return super().head()
+
+    def admit(self, n_free: int, free_pages: int | None = None,
+              page_cost=None) -> list[Request]:
+        self._order()
+        return super().admit(n_free, free_pages, page_cost)

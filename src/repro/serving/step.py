@@ -220,6 +220,37 @@ def make_copy_pages_step():
     return copy_pages
 
 
+def make_gather_pages_step():
+    """Jittable page DOWNLOAD gather for preemption (engine.py +
+    serving/offload.py): pull pool pages ``pages`` out of the device
+    cache across every layer, K and V — the (layers, n, page_size, KV,
+    hd) results are what the host offload store keeps while the pages
+    themselves are released for reuse.
+
+    gather(cache, pages (n,) int32) -> (k, v)
+    """
+    def gather_pages(cache, pages):
+        return cache["k"][:, pages], cache["v"][:, pages]
+    return gather_pages
+
+
+def make_scatter_pages_step():
+    """Jittable page UPLOAD scatter, the restore half of preemption:
+    write host-held page data ``k``/``v`` (layers, n, page_size, KV, hd)
+    into freshly allocated pool pages ``dst``. Duplicate indices in
+    ``dst`` (the engine's power-of-two padding repeats the first page
+    with its own data) write identical values, so the pad is a no-op.
+
+    scatter(cache, dst (n,) int32, k, v) -> new_cache
+    """
+    def scatter_pages(cache, dst, k, v):
+        out = dict(cache)
+        out["k"] = cache["k"].at[:, dst].set(k)
+        out["v"] = cache["v"].at[:, dst].set(v)
+        return out
+    return scatter_pages
+
+
 def make_decode_step(cfg, dist=None, temperature: float = 0.0):
     def decode_step(params, cache, tokens, pos, rng):
         logits, cache = registry.decode_step(cfg, params, cache, tokens,

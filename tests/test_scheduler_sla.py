@@ -1,0 +1,197 @@
+"""Scheduler tests: SLA-class ordering, deadline (EDF) order, aging /
+no-starvation, and the accounting fixes (queued_at stamped at enqueue,
+uid-aware page-gate rejection counting, unified submit-time
+feasibility). Pure host-side — no model, no jax."""
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypo import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.scheduler import (BATCH, INTERACTIVE,  # noqa: E402
+                                     FIFOScheduler, Request, SLAScheduler)
+
+
+def _req(uid, plen=4, budget=8, **kw):
+    return Request(uid, np.arange(1, plen + 1, dtype=np.int32), budget,
+                   **kw)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+# --------------------------------------------------------- satellite bugs
+def test_queued_at_stamped_at_submit_not_construction():
+    """A request constructed long before submission must not inflate
+    queued-time stats: the enqueue re-stamps ``queued_at``."""
+    clock = FakeClock(100.0)
+    sched = FIFOScheduler(2, 16, clock=clock)
+    req = _req(0)                     # constructed at fake-time "now"
+    ctor_stamp = req.queued_at        # time.monotonic(), irrelevant
+    clock.t = 123.0
+    sched.submit(req)
+    assert req.queued_at == 123.0
+    assert req.queued_at != ctor_stamp
+    # deadline resolves against the enqueue stamp
+    r2 = _req(1, deadline_s=2.5)
+    clock.t = 200.0
+    sched.submit(r2)
+    assert r2.deadline_at == 202.5
+    assert req.deadline_at is None
+
+
+def test_rejections_count_distinct_blocked_heads():
+    """A single page-blocked head waiting N engine steps is ONE
+    rejection event (but N rejected_steps); a new blocked head is a
+    second event."""
+    sched = FIFOScheduler(4, 16)
+    sched.submit(_req(0))
+    blocked = lambda group: 10**9     # page gate always over budget
+    for _ in range(5):
+        assert sched.admit(4, free_pages=0, page_cost=blocked) == []
+    assert sched.rejections == 1
+    assert sched.rejected_steps == 5
+    # head admitted elsewhere -> new head blocks -> second event
+    [r0] = sched.admit(4)
+    assert r0.uid == 0
+    sched.submit(_req(7))
+    for _ in range(3):
+        assert sched.admit(4, free_pages=0, page_cost=blocked) == []
+    assert sched.rejections == 2
+    assert sched.rejected_steps == 8
+    sched.reset_stats()
+    assert sched.rejections == 0 and sched.rejected_steps == 0
+
+
+def test_feasibility_hook_runs_at_submit():
+    """The engine-installed feasibility hook rejects at submit, after
+    the slot gate, with the hook's own message."""
+    sched = FIFOScheduler(2, 16)
+
+    def hook(req):
+        if req.prompt_len > 8:
+            raise ValueError("oversized request: too many pages")
+    sched.feasibility = hook
+    sched.submit(_req(0, plen=8))          # passes both gates
+    with pytest.raises(ValueError, match="max_len"):
+        sched.submit(_req(1, plen=16))     # slot gate first
+    with pytest.raises(ValueError, match="oversized request"):
+        sched.submit(_req(2, plen=12))     # then the page gate
+    assert len(sched) == 1                 # rejected requests never queue
+
+
+# ----------------------------------------------------------- SLA ordering
+def test_priority_classes_order_admission():
+    clock = FakeClock()
+    sched = SLAScheduler(4, 16, clock=clock)
+    sched.submit(_req(0, priority=BATCH))
+    sched.submit(_req(1, priority=BATCH))
+    sched.submit(_req(2, priority=INTERACTIVE))
+    # interactive jumps the batch tier; within a class, arrival order
+    assert [r.uid for r in sched.admit(3)] == [2, 0, 1]
+
+
+def test_strict_arrival_order_within_class():
+    sched = SLAScheduler(8, 16, clock=FakeClock())
+    for uid in range(5):
+        sched.submit(_req(uid, priority=BATCH))
+    assert [r.uid for r in sched.admit(8)] == [0, 1, 2, 3, 4]
+
+
+def test_deadline_orders_within_class_only():
+    clock = FakeClock()
+    sched = SLAScheduler(8, 16, clock=clock)
+    sched.submit(_req(0, priority=BATCH, deadline_s=1.0))
+    sched.submit(_req(1, priority=INTERACTIVE))          # no deadline
+    sched.submit(_req(2, priority=INTERACTIVE, deadline_s=5.0))
+    sched.submit(_req(3, priority=INTERACTIVE, deadline_s=2.0))
+    # class first (0 before 1), EDF within class, deadline-less last
+    assert [r.uid for r in sched.admit(8)] == [3, 2, 1, 0]
+
+
+def test_aging_promotes_waiting_batch_request():
+    clock = FakeClock()
+    sched = SLAScheduler(4, 16, aging_s=10.0, clock=clock)
+    sched.submit(_req(0, priority=BATCH))
+    clock.t = 11.0                       # one full aging period waited
+    sched.submit(_req(1, priority=INTERACTIVE))
+    # batch aged to effective class 0; ties break by arrival -> 0 first
+    assert [r.uid for r in sched.admit(1)] == [0]
+    # aging disabled: interactive always wins
+    sched2 = SLAScheduler(4, 16, aging_s=None, clock=clock)
+    clock.t = 0.0
+    sched2.submit(_req(0, priority=BATCH))
+    clock.t = 1000.0
+    sched2.submit(_req(1, priority=INTERACTIVE))
+    assert [r.uid for r in sched2.admit(1)] == [1]
+
+
+def test_page_gate_semantics_preserved_under_sla():
+    """The ordered head still blocks head-of-line on pages — a batch
+    request behind a page-blocked interactive head must wait."""
+    sched = SLAScheduler(4, 16, clock=FakeClock())
+    sched.submit(_req(0, priority=BATCH, budget=1))
+    sched.submit(_req(1, priority=INTERACTIVE, budget=8))
+    cost = lambda group: sum(r.max_new_tokens for r in group)
+    # interactive head needs 8 pages, only 4 free: NOTHING admits even
+    # though the batch request alone would fit
+    assert sched.admit(4, free_pages=4, page_cost=cost) == []
+    assert sched.rejections == 1
+    # enough pages: ordered prefix admits
+    got = sched.admit(4, free_pages=9, page_cost=cost)
+    assert [r.uid for r in got] == [1, 0]
+
+
+@settings(max_examples=15)
+@given(prio=st.integers(1, 3), flood=st.integers(1, 3),
+       seed=st.integers(0, 10**6))
+def test_no_starvable_ordering_property(prio, flood, seed):
+    """Anti-starvation bound: a class-``prio`` request facing a
+    sustained flood of interactive arrivals is always admitted in
+    bounded time — no priority ordering starves an aged request.
+
+    The bound: everyone ages at the same rate, so only interactives
+    arriving within ``prio * aging_s`` after the batch request can EVER
+    outrank it (later arrivals never close the class gap before the
+    batch request ties them, and ties break by arrival). That window
+    holds at most ``flood * prio * aging_s / round`` competitors, each
+    served one per round — total wait <=
+    ``prio * aging_s * (1 + flood)`` plus scheduling slack."""
+    aging_s = 10.0
+    clock = FakeClock()
+    sched = SLAScheduler(4, 16, aging_s=aging_s, clock=clock)
+    rng = np.random.default_rng(seed)
+    batch = _req(10**6, priority=prio)
+    sched.submit(batch)
+    admitted_at = None
+    uid = 0
+    for _ in range(400):                 # rounds of ~1s each
+        for _ in range(flood):
+            sched.submit(_req(uid, priority=INTERACTIVE))
+            uid += 1
+        got = sched.admit(1)             # one lane per round
+        assert len(got) == 1
+        if got[0] is batch:
+            admitted_at = clock.t
+            break
+        clock.t += float(rng.uniform(0.5, 1.5))
+    assert admitted_at is not None, "batch request starved"
+    bound = prio * aging_s * (1 + flood) + aging_s + 5.0
+    assert admitted_at - batch.queued_at <= bound
+
+
+def test_push_front_restores_order():
+    sched = SLAScheduler(4, 16, clock=FakeClock())
+    for uid in range(3):
+        sched.submit(_req(uid, priority=INTERACTIVE))
+    got = sched.admit(3)
+    sched.push_front(got[1:])            # un-admit 1 and 2
+    assert [r.uid for r in sched.admit(3)] == [1, 2]
