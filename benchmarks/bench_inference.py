@@ -16,7 +16,7 @@ depth, page-gate rejections, queued time) — so the serving perf
 trajectory is tracked PR over PR (CI uploads it on every run).
 
     PYTHONPATH=src:. python benchmarks/bench_inference.py \
-        [--smoke] [--mixed-only] [--frontdoor-only] \
+        [--smoke] [--mixed-only] [--frontdoor-only] [--chaos-only] \
         [--out BENCH_serving.json]
 
 ``--smoke`` runs a tiny config through the same dispatch path (CI guard
@@ -31,7 +31,15 @@ batching — bitwise token parity mixed vs phased vs the oracle under
 continuous arrivals, decode stalls ELIMINATED (the counter reads 0
 where phased racks them up), and TTFT p95 no worse than phased.
 ``--mixed-only`` runs just the mixed sweep + its asserts (the CI
-mixed-smoke job). ``--frontdoor-only`` runs just the front-door sweep
+mixed-smoke job). ``--chaos-only`` runs the fault-injection suite (the
+CI chaos-smoke job) and writes ``BENCH_chaos.json`` — the chaos parity
+oracle (seeded NaN lane + engine-thread crash + corrupted offload
+record: survivors bitwise-identical, victims fail structurally), the
+watchdog hang recovery (>=1 lane restored from offloaded KV with ZERO
+re-prefilled tokens, recovery latency recorded), and a load-shed flood
+(bounded queue, retry-after on every rejection, admitted-request TTFT
+p95 under the queue-depth service bound).
+``--frontdoor-only`` runs just the front-door sweep
 and HARD-ASSERTS the production-API guarantees: tokens bitwise-equal
 across FIFO / SLA / SLA+preempt schedulers, interactive TTFT p95
 STRICTLY better under SLA than FIFO on the same trace, >=1 real
@@ -47,6 +55,7 @@ from __future__ import annotations
 import argparse
 import asyncio
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -56,6 +65,8 @@ from benchmarks.common import bench_cfg, replace_blast, row, timeit
 from repro.core.prune_grow import initial_mask
 from repro.models import registry
 from repro.serving import engine, export, serve_loop
+from repro.serving.faults import (BackpressureError, FaultPlan,
+                                  LaneFaultError)
 from repro.serving.frontend import AsyncEngine
 from repro.serving.scheduler import (BATCH, INTERACTIVE, FIFOScheduler,
                                      SLAScheduler)
@@ -546,6 +557,278 @@ def _check_async_guarantees(cfg, params) -> None:
           f"streams={len(got)}")
 
 
+def _pool_balanced(eng) -> bool:
+    pool = eng.pool
+    return (pool.free_pages + pool.referenced + pool.cached_idle
+            == pool.n_pages and pool.referenced == 0)
+
+
+def _chaos_trace(cfg, params, *, seed: int = 5):
+    """The chaos oracle workload (mirrors the slow chaos test): one
+    seeded plan arms a NaN lane at step 2, a host-side engine-thread
+    crash at step 4 (live KV salvaged to host RAM), and a bit-flip of
+    the FIRST salvaged record. Driven through ``AsyncEngine`` so the
+    watchdog monitor performs the recovery. Returns the fault-free
+    baseline, the chaos results (GenResult or the structured error per
+    request), and the stats + recovery log the rows and asserts read."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32) for n in (7, 5, 9, 6)]
+
+    eng0 = engine.Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
+                         page_size=4)
+    buids = [eng0.submit(p, 12) for p in prompts]
+    base = eng0.run()
+
+    async def drive():
+        plan = (FaultPlan(seed=seed).poison_logits(2, 1)
+                .crash(4, device_lost=False)
+                .corrupt_offload(nth_save=0))
+        eng = engine.Engine(cfg, params, max_batch=2, max_len=48,
+                            slab_k=4, page_size=4, faults=plan)
+        front = AsyncEngine(eng, max_recoveries=2)
+        async with front:
+            streams = [await front.submit_async(p, 12) for p in prompts]
+            results = {}
+            for s in streams:
+                try:
+                    res = await s.result()
+                except Exception as e:           # structured failure
+                    results[s.uid] = e
+                else:
+                    results[res.uid] = res
+        return eng, front, plan, results
+
+    t0 = time.monotonic()
+    eng, front, plan, got = asyncio.run(
+        asyncio.wait_for(drive(), timeout=300.0))
+    return {"eng": eng, "front": front, "plan": plan, "got": got,
+            "base": base, "buids": buids,
+            "elapsed_s": time.monotonic() - t0}
+
+
+def _watchdog_trace(cfg, params, *, seed: int = 4):
+    """The hung-step scenario: a jitted step stalls far past the
+    watchdog deadline; the monitor condemns and tears down the stepper,
+    the supervisor salvages every live lane's KV to host RAM, and the
+    run completes with ZERO re-prefilled tokens (the acceptance
+    criterion the bench records)."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32) for n in (7, 5, 9)]
+
+    eng0 = engine.Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
+                         page_size=4)
+    buids = [eng0.submit(p, 12) for p in prompts]
+    base = eng0.run()
+
+    async def drive():
+        eng = engine.Engine(cfg, params, max_batch=2, max_len=48,
+                            slab_k=4, page_size=4,
+                            faults=FaultPlan().stall(2, seconds=60.0))
+        # generous deadline: a slow-but-progressing step must never
+        # trip it (and a condemned step that is merely slow is treated
+        # as a false alarm) — only the injected stall dies here
+        front = AsyncEngine(eng, watchdog_s=2.0, max_recoveries=1)
+        async with front:
+            streams = [await front.submit_async(p, 12) for p in prompts]
+            results = {r.uid: r
+                       for r in [await s.result() for s in streams]}
+        return eng, front, results
+
+    t0 = time.monotonic()
+    eng, front, got = asyncio.run(
+        asyncio.wait_for(drive(), timeout=300.0))
+    return {"eng": eng, "front": front, "got": got, "base": base,
+            "buids": buids, "elapsed_s": time.monotonic() - t0}
+
+
+def _shed_flood(cfg, params, *, limit: int = 4, n_flood: int = 40,
+                budget: int = 4, seed: int = 13):
+    """Load-shedding under a sustained flood: arrivals outpace service
+    2 submits per engine step, the admission queue is bounded at
+    ``limit``, and every overflow is rejected at submit time with a
+    ``BackpressureError`` carrying a retry-after hint. Admitted
+    requests must keep a bounded TTFT — the whole point of shedding is
+    that the clients you DO accept are served promptly."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32)
+               for n in rng.integers(5, 9, size=n_flood)]
+    eng = engine.Engine(cfg, params, max_batch=2, max_len=48,
+                        prefill_chunk=8, slab_k=2, page_size=8,
+                        scheduler=SLAScheduler(2, 48, aging_s=5.0),
+                        admission_queue_limit=limit)
+    for p in prompts[:2]:                      # warm the jit shapes
+        eng.submit(p, budget, priority=INTERACTIVE)
+    eng.run()
+    eng.reset_stats()
+
+    admitted, hints, res = [], [], {}
+    i, guard = 0, 0
+    t0 = time.monotonic()
+    while i < n_flood or eng.active_lanes or len(eng.scheduler):
+        for _ in range(2):                     # 2 arrivals per step
+            if i >= n_flood:
+                break
+            try:
+                admitted.append(eng.submit(prompts[i], budget,
+                                           priority=INTERACTIVE))
+            except BackpressureError as e:
+                hints.append(e.retry_after_s)
+            i += 1
+        for r in eng.step():
+            res[r.uid] = r
+        guard += 1
+        assert guard < 100_000, "flood failed to drain"
+    elapsed = time.monotonic() - t0
+    eng.finalize_stats()
+    st = dict(eng.stats)
+    ttft_p95 = float(np.percentile(
+        [res[u].ttft_s for u in admitted], 95))
+    # with a bounded queue, an admitted request waits behind at most
+    # ``limit`` queued + ``max_batch`` running requests; 3x measured
+    # per-request service + slack is a real bound, not headroom — an
+    # unbounded queue would push TTFT toward n_flood * service
+    service_s = elapsed / max(len(admitted), 1)
+    bound_s = 3.0 * (limit + 2) * service_s + 0.5
+    return {"eng": eng, "st": st, "admitted": admitted, "res": res,
+            "hints": hints, "n_flood": n_flood, "limit": limit,
+            "ttft_p95_s": ttft_p95, "service_s": service_s,
+            "bound_s": bound_s, "elapsed_s": elapsed}
+
+
+def _chaos_sweep(cfg, label: str, params, *, results: list):
+    """Fault injection / recovery / load-shedding rows for
+    ``BENCH_chaos.json``: recovery latency, re-prefilled tokens per
+    recovery, zero-reprefill salvage counts, and the shed rate — so the
+    fault-tolerance trajectory is tracked PR over PR. Returns the three
+    measured traces for ``_check_chaos_guarantees`` (the rows land on
+    disk BEFORE the asserts run)."""
+    chaos = _chaos_trace(cfg, params)
+    st, log = chaos["eng"].stats, chaos["front"].recovery_log
+    failed = sum(isinstance(r, Exception)
+                 for r in chaos["got"].values())
+    lat = log[0]["latency_s"] if log else float("nan")
+    row(f"engine_{label}_chaos_recovery", lat * 1e6,
+        f"recoveries={st['recoveries']} faults={st['faults_injected']} "
+        f"quarantined={st['lanes_quarantined']} "
+        f"re_prefilled={st['re_prefilled_tokens']}")
+    results.append({
+        "name": f"engine_{label}_chaos_recovery",
+        "faults_injected": st["faults_injected"],
+        "lanes_quarantined": st["lanes_quarantined"],
+        "recoveries": st["recoveries"],
+        "engine_crashes": st["engine_crashes"],
+        "watchdog_hangs": st["watchdog_hangs"],
+        "recovery_latency_s": lat,
+        "recovered_zero_reprefill": st["recovered_zero_reprefill"],
+        "re_prefilled_tokens": st["re_prefilled_tokens"],
+        "re_prefilled_tokens_per_recovery":
+            st["re_prefilled_tokens"] / max(st["recoveries"], 1),
+        "salvaged_lanes": log[0]["salvaged_lanes"] if log else 0,
+        "failed_requests": failed,
+        "survivor_requests": len(chaos["got"]) - failed,
+        "elapsed_s": chaos["elapsed_s"],
+    })
+
+    wd = _watchdog_trace(cfg, params)
+    st, log = wd["eng"].stats, wd["front"].recovery_log
+    lat = log[0]["latency_s"] if log else float("nan")
+    row(f"engine_{label}_chaos_watchdog", lat * 1e6,
+        f"hangs={st['watchdog_hangs']} "
+        f"salvaged={log[0]['salvaged_lanes'] if log else 0} "
+        f"re_prefilled={st['re_prefilled_tokens']}")
+    results.append({
+        "name": f"engine_{label}_chaos_watchdog",
+        "watchdog_hangs": st["watchdog_hangs"],
+        "recoveries": st["recoveries"],
+        "recovery_latency_s": lat,
+        "recovered_zero_reprefill": st["recovered_zero_reprefill"],
+        "re_prefilled_tokens": st["re_prefilled_tokens"],
+        "salvaged_lanes": log[0]["salvaged_lanes"] if log else 0,
+        "offload_bytes_peak": st["offload_bytes_peak"],
+        "elapsed_s": wd["elapsed_s"],
+    })
+
+    shed = _shed_flood(cfg, params)
+    st = shed["st"]
+    row(f"engine_{label}_chaos_shed",
+        shed["ttft_p95_s"] * 1e6,
+        f"shed={st['shed_requests']}/{shed['n_flood']} "
+        f"admitted={len(shed['admitted'])} "
+        f"queue_peak={st['queue_depth_peak']} "
+        f"ttft_p95_ms={shed['ttft_p95_s'] * 1e3:.1f}")
+    results.append({
+        "name": f"engine_{label}_chaos_shed",
+        "flood_requests": shed["n_flood"],
+        "admission_queue_limit": shed["limit"],
+        "admitted": len(shed["admitted"]),
+        "shed_requests": st["shed_requests"],
+        "shed_rate": st["shed_requests"] / shed["n_flood"],
+        "retry_after_mean_s":
+            float(np.mean(shed["hints"])) if shed["hints"] else 0.0,
+        "queue_depth_peak": st["queue_depth_peak"],
+        "ttft_p95_admitted_s": shed["ttft_p95_s"],
+        "ttft_bound_s": shed["bound_s"],
+        "service_s_per_request": shed["service_s"],
+        "elapsed_s": shed["elapsed_s"],
+    })
+    return chaos, wd, shed
+
+
+def _check_chaos_guarantees(chaos, wd, shed) -> None:
+    """--chaos-only hard asserts (acceptance criteria), on the SAME
+    traces the rows were measured from: (a) the chaos parity oracle —
+    all three faults fire, exactly the poisoned lane and the corrupted
+    record fail (structured ``LaneFaultError``s), every survivor is
+    bitwise-identical to the fault-free run, and the page pool balances
+    after recovery; (b) the watchdog tears down the hung step and the
+    salvage restores >=1 lane from offloaded KV with ZERO re-prefilled
+    tokens; (c) the flood keeps the queue bounded, every rejection
+    carries a positive retry-after, and admitted requests' TTFT p95
+    stays under the queue-depth service bound."""
+    st, plan, got = chaos["eng"].stats, chaos["plan"], chaos["got"]
+    assert len(plan.fired) == 3, plan.fired
+    failed = {u: r for u, r in got.items() if isinstance(r, Exception)}
+    assert len(failed) == 2, sorted(failed)
+    assert all(isinstance(e, LaneFaultError) for e in failed.values())
+    assert sum("checksum" in e.reason for e in failed.values()) == 1
+    base, buids = chaos["base"], chaos["buids"]
+    for u in sorted(u for u in got if u not in failed):
+        assert (got[u].generated.tolist()
+                == base[buids[u]].generated.tolist()), u
+    assert st["faults_injected"] == 3, st
+    assert st["lanes_quarantined"] == 2, st
+    assert st["recoveries"] == 1 and st["engine_crashes"] == 1, st
+    assert _pool_balanced(chaos["eng"])
+
+    st, log, got = wd["eng"].stats, wd["front"].recovery_log, wd["got"]
+    assert st["watchdog_hangs"] == 1 and st["recoveries"] == 1, st
+    assert st["recovered_zero_reprefill"] >= 1, st
+    assert st["re_prefilled_tokens"] == 0, st
+    assert log and log[0]["salvaged_lanes"] >= 1, log
+    for u in sorted(got):
+        assert (got[u].generated.tolist()
+                == wd["base"][wd["buids"][u]].generated.tolist()), u
+    assert _pool_balanced(wd["eng"])
+
+    st = shed["st"]
+    assert st["shed_requests"] > 0, st
+    assert st["shed_requests"] == len(shed["hints"])
+    assert all(h > 0 for h in shed["hints"])
+    assert st["queue_depth_peak"] <= shed["limit"], st
+    assert all(shed["res"][u].ok for u in shed["admitted"])
+    assert shed["ttft_p95_s"] < shed["bound_s"], \
+        (shed["ttft_p95_s"], shed["bound_s"])
+    print("# chaos suite OK: "
+          f"recovery_latency_ms={chaos['front'].recovery_log[0]['latency_s'] * 1e3:.1f} "
+          f"watchdog_salvaged={log[0]['salvaged_lanes']} "
+          f"re_prefilled_after_hang={wd['eng'].stats['re_prefilled_tokens']} "
+          f"shed={st['shed_requests']}/{shed['n_flood']} "
+          f"ttft_p95_admitted_ms={shed['ttft_p95_s'] * 1e3:.1f}")
+
+
 def _check_mixed_guarantees(cfg, params) -> None:
     """--smoke hard asserts for mixed batching, under continuous
     arrivals (one submit per step): (a) greedy tokens BITWISE-equal
@@ -663,17 +946,22 @@ def _check_paged_guarantees(cfg, params) -> None:
 
 
 def main(smoke: bool = False, out: str = "BENCH_serving.json",
-         mixed_only: bool = False, frontdoor_only: bool = False):
+         mixed_only: bool = False, frontdoor_only: bool = False,
+         chaos_only: bool = False):
     results: list[dict] = []
     check = None
-    if smoke or mixed_only or frontdoor_only:
+    chaos_payload = None
+    if smoke or mixed_only or frontdoor_only or chaos_only:
         # tiny config through the REAL dispatch path: decode slabs,
         # per-lane frontiers, paged pool, packed XLA-backend kernels
         cfg = bench_cfg(num_layers=1, d_model=64, d_ff=128,
                         vocab_size=128, num_heads=2, num_kv_heads=2)
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
         check = (cfg, params)
-        if frontdoor_only:
+        if chaos_only:
+            chaos_payload = _chaos_sweep(cfg, "dense", params,
+                                         results=results)
+        elif frontdoor_only:
             _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
                              results=results)
         elif not mixed_only:
@@ -695,7 +983,7 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
             _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
                              results=results, n_batch=4, n_inter=3,
                              batch_budget=13)
-        if not frontdoor_only:
+        if not (frontdoor_only or chaos_only):
             _mixed_sweep(cfg, "dense", params, sparsity=0.0,
                          results=results, n_req=6, max_batch=2,
                          new_tokens=9, prefill_chunk=4, reps=2)
@@ -745,8 +1033,9 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
         _frontdoor_sweep(scfg, "packed_s90", packed, sparsity=0.9,
                          results=results)
 
-    artifact = {"bench": "serving",
-                "smoke": smoke or mixed_only or frontdoor_only,
+    artifact = {"bench": "chaos" if chaos_only else "serving",
+                "smoke": (smoke or mixed_only or frontdoor_only
+                          or chaos_only),
                 "rows": results}
     with open(out, "w") as f:
         json.dump(artifact, f, indent=2)
@@ -756,6 +1045,9 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
         # hard asserts AFTER the artifact lands on disk, so the CI
         # upload preserves the measured rows even when parity breaks —
         # exactly the runs where the trajectory matters most
+        if chaos_only:
+            _check_chaos_guarantees(*chaos_payload)
+            return
         if frontdoor_only:
             _check_frontdoor_guarantees(*check)
             _check_no_starvation(*check)
@@ -782,7 +1074,12 @@ if __name__ == "__main__":
                     help="just the FIFO-vs-SLA-vs-preempt front-door "
                          "sweep + async/SLA/no-starvation hard asserts "
                          "(CI async-smoke job)")
+    ap.add_argument("--chaos-only", action="store_true",
+                    help="just the fault-injection suite: chaos parity "
+                         "oracle, watchdog hang recovery, load-shed "
+                         "flood + their hard asserts, writing "
+                         "BENCH_chaos.json (CI chaos-smoke job)")
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
     main(smoke=args.smoke, out=args.out, mixed_only=args.mixed_only,
-         frontdoor_only=args.frontdoor_only)
+         frontdoor_only=args.frontdoor_only, chaos_only=args.chaos_only)

@@ -90,13 +90,19 @@ stays on the ``serve_loop`` oracle path.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+from collections import deque
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.serving.faults import (BackpressureError, DeadlineExceededError,
+                                  LaneFaultError, OffloadCapacityError,
+                                  OffloadCorruptionError,
+                                  RequestCancelledError)
 from repro.serving.offload import HostKVStore
 from repro.serving.pages import PagePool
 from repro.serving.prefix_cache import Match, PrefixCache
@@ -113,12 +119,23 @@ from repro.serving.step import (make_copy_pages_step,
 
 @dataclasses.dataclass
 class GenResult:
-    """Finished request: prompt + generated tokens (greedy)."""
+    """Finished request: prompt + generated tokens (greedy).
+
+    A request that FAILED (quarantined lane, cancellation, deadline,
+    corrupted offload record) still flows out through the same channel,
+    with the structured exception in ``error`` and ``generated``
+    holding whatever tokens it emitted before failing — the engine
+    never silently drops a submitted uid."""
     uid: int
     prompt: np.ndarray
     generated: np.ndarray
     truncated: bool = False    # hit the lane's slot cap before budget
     ttft_s: float = 0.0        # submit -> first token (monotonic clock)
+    error: Exception | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
     @property
     def tokens(self) -> np.ndarray:
@@ -153,6 +170,9 @@ class _Preempted:
     remaining: int             # decode budget left
     n_pages: int               # logical pages the block table covered
     pinned: dict[int, int]
+    # crash-salvaged (serving/recovery.py) rather than preempted: its
+    # restore counts toward recovered_zero_reprefill
+    recovered: bool = False
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -209,7 +229,10 @@ class Engine:
                  n_pages: int | None = None, attn_backend: str = "xla",
                  prefix_cache: bool = False, mixed: bool = False,
                  prefill_token_budget: int | None = None,
-                 preempt: bool = False, offload_store=None):
+                 preempt: bool = False, offload_store=None,
+                 offload_capacity_bytes: int | None = None,
+                 admission_queue_limit: int | None = None,
+                 enforce_deadlines: bool = False, faults=None):
         if not registry.supports_prefill_chunk(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} is not KV-cache servable by the "
@@ -268,7 +291,30 @@ class Engine:
             "offsets": np.zeros(max_batch, np.int32),
             "remaining": np.zeros(max_batch, np.int32),
             "live": np.zeros(max_batch, bool),
+            # fault containment (serving/step.py _run_slab): poison is
+            # the injection port (added to the first in-slab step's
+            # logits, normally all zero), faulted the device-side
+            # per-lane finite-check verdict the host quarantines on
+            "poison": np.zeros(max_batch, np.float32),
+            "faulted": np.zeros(max_batch, bool),
         }
+        # load shedding + SLA enforcement + failure routing
+        self.admission_queue_limit = admission_queue_limit
+        self.enforce_deadlines = enforce_deadlines
+        self._finish_times: deque[float] = deque(maxlen=32)
+        # uid -> (original prompt, tokens emitted before a crash
+        # relaunch): a relaunched request decodes over prompt+emitted,
+        # but its GenResult must report the ORIGINAL split
+        self._recovered_prefix: dict[int, tuple[np.ndarray, list[int]]] = {}
+        # failure results harvested outside step()'s return (cancel,
+        # corrupted restore, recovery) — drained at the next step
+        self._pending_results: list[GenResult] = []
+        self._step_idx = 0
+        # set by the watchdog/supervisor to abort a wedged device call
+        # (the injected-stall hook polls it; a real deployment would
+        # map this to killing the device stream)
+        self._condemned = threading.Event()
+        self._faults = None
         self.pcache: PrefixCache | None = None
         # lanes frozen off-device by preemption, awaiting restore (any
         # paged engine can be preempted explicitly via ``preempt()``;
@@ -294,7 +340,7 @@ class Engine:
             # the jitted device<->host page movers (pow2-padded index
             # vectors keep the jit cache O(log max_pages))
             self._offload = (offload_store if offload_store is not None
-                             else HostKVStore())
+                             else HostKVStore(offload_capacity_bytes))
             self._gather = jax.jit(make_gather_pages_step())
             self._scatter = jax.jit(make_scatter_pages_step())
             # page-unit feasibility moves INTO the scheduler's submit
@@ -325,6 +371,19 @@ class Engine:
         self._dirty = True
         self._uid = 0
         self.reset_stats()
+        if faults is not None:
+            self.install_faults(faults)
+
+    def install_faults(self, plan) -> None:
+        """Wire a seeded ``FaultPlan`` (serving/faults.py) into every
+        injection point: the step hooks, the page allocator, and the
+        offload store. Chaos-test plumbing — a production engine runs
+        with no plan installed and every hook is a no-op."""
+        self._faults = plan
+        plan._engine = self
+        if self.paged:
+            self.pool.fault_hook = plan.on_alloc
+            self._offload.fault_hook = plan.on_offload_save
 
     def reset_stats(self):
         # per-request latency samples (monotonic clock): TTFT and
@@ -367,7 +426,19 @@ class Engine:
                       "preempt_pinned_pages": 0, "offload_bytes_peak": 0,
                       # page-gate accounting: distinct blocked heads
                       # (admission_rejections) vs blocked steps
-                      "admission_rejected_steps": 0}
+                      "admission_rejected_steps": 0,
+                      # fault tolerance: injected faults that fired,
+                      # lanes quarantined (non-finite logits or a
+                      # corrupted offload record), watchdog recoveries
+                      # (crashes + hangs, split out), lanes that came
+                      # back from offloaded KV with ZERO re-prefill,
+                      # tokens re-prefilled by relaunches, and requests
+                      # shed/cancelled before or during decode
+                      "faults_injected": 0, "lanes_quarantined": 0,
+                      "recoveries": 0, "recovered_zero_reprefill": 0,
+                      "re_prefilled_tokens": 0, "shed_requests": 0,
+                      "cancelled": 0, "deadline_cancelled": 0,
+                      "watchdog_hangs": 0, "engine_crashes": 0}
         if hasattr(self.scheduler, "reset_stats"):
             self.scheduler.reset_stats()
         if getattr(self, "pool", None) is not None:
@@ -411,7 +482,19 @@ class Engine:
         never hold) raise ``ValueError`` HERE, synchronously: the
         scheduler's submit gate runs both checks (``_check_feasible``
         is installed as its feasibility hook), so a request never
-        queues only to surface an error later."""
+        queues only to surface an error later.
+
+        With ``admission_queue_limit`` set, a submit that would push the
+        queue past the bound is SHED instead of queued unboundedly:
+        ``BackpressureError`` carries a retry-after hint derived from
+        the recent request-completion rate — already-admitted work keeps
+        its latency; new arrivals are told when capacity is likely."""
+        if (self.admission_queue_limit is not None
+                and len(self.scheduler) >= self.admission_queue_limit):
+            self.stats["shed_requests"] += 1
+            raise BackpressureError(len(self.scheduler),
+                                    self.admission_queue_limit,
+                                    self._retry_after_hint())
         uid = self._uid if uid is None else uid
         self._uid = max(self._uid, uid) + 1
         req = Request(uid, np.asarray(prompt), max_new_tokens,
@@ -420,6 +503,18 @@ class Engine:
         self.stats["queue_depth_peak"] = max(
             self.stats["queue_depth_peak"], len(self.scheduler))
         return uid
+
+    def _retry_after_hint(self) -> float:
+        """Seconds until one queue slot plausibly frees: the inverse of
+        the recent completion rate (last ``_finish_times`` window),
+        clamped to [0.05, 60]. A cold engine (nothing finished yet)
+        hints 1s — a guess, and documented as such in the error."""
+        ft = self._finish_times
+        if len(ft) >= 2 and ft[-1] > ft[0]:
+            est = (ft[-1] - ft[0]) / (len(ft) - 1)
+        else:
+            est = 1.0
+        return float(min(60.0, max(0.05, est)))
 
     def _check_feasible(self, req: Request) -> None:
         """Page-unit submit gate (paged engines), installed on the
@@ -553,9 +648,118 @@ class Engine:
         ttft = max(0.0, tt[0] - lane.req.queued_at) if tt else 0.0
         self._ttft.append(ttft)
         self._itl.extend(b - a for a, b in zip(tt, tt[1:]))
-        return GenResult(lane.req.uid, lane.req.prompt,
-                         np.asarray(lane.generated, np.int32), truncated,
+        self._finish_times.append(time.monotonic())
+        # a crash-relaunched request decoded over prompt+emitted; its
+        # result must report the ORIGINAL prompt/generated split (TTFT
+        # is recovery-local — the pre-crash timeline died with the
+        # thread)
+        prompt, gen = lane.req.prompt, lane.generated
+        pre = self._recovered_prefix.pop(lane.req.uid, None)
+        if pre is not None:
+            prompt, gen = pre[0], list(pre[1]) + gen
+        return GenResult(lane.req.uid, prompt,
+                         np.asarray(gen, np.int32), truncated,
                          ttft_s=ttft)
+
+    # --------------------------------------------- quarantine / cancel
+    def _failed_result(self, req: Request, generated: list[int],
+                       exc: Exception) -> GenResult:
+        """Build the structured-failure GenResult for ``req``, merging
+        any crash-relaunch prefix so the prompt/generated split is the
+        original one. No TTFT/ITL samples — failed requests must not
+        skew the latency percentiles."""
+        prompt, gen = req.prompt, list(generated)
+        pre = self._recovered_prefix.pop(req.uid, None)
+        if pre is not None:
+            prompt, gen = pre[0], list(pre[1]) + gen
+        return GenResult(req.uid, prompt, np.asarray(gen, np.int32),
+                         error=exc)
+
+    def _fail_lane(self, i: int, exc: Exception) -> GenResult:
+        """Tear down lane ``i`` with a structured error: free its pages
+        (NEVER donating to the prefix cache — a quarantined lane's KV
+        is not trusted; shared pages it pinned just unpin), clear its
+        device state, and route the failure out as a GenResult. The
+        other lanes' device state is untouched — their token streams
+        stay bitwise-identical to a fault-free run."""
+        lane = self.lanes[i]
+        self.lanes[i] = None
+        m = self._mirror
+        m["live"][i] = False
+        m["faulted"][i] = False
+        m["poison"][i] = 0.0
+        if self.paged and lane.pages:
+            self.pool.release(lane.pages)
+            m["bt"][i] = 0
+        self._prefilling.pop(i, None)
+        self._dirty = True
+        self.stats["evicted"] += 1
+        self._finish_times.append(time.monotonic())
+        return self._failed_result(lane.req, lane.generated, exc)
+
+    def _harvest_faults(self, finished: list[GenResult]) -> None:
+        """Quarantine every lane the device-side finite check flagged
+        this step (slab carry or mixed-step verdict, already folded
+        into the mirror): each fails ONLY its own request with
+        ``LaneFaultError``."""
+        m = self._mirror
+        if not m["faulted"].any():
+            return
+        for i in self.active_lanes:
+            if m["faulted"][i]:
+                uid = self.lanes[i].req.uid
+                self.stats["lanes_quarantined"] += 1
+                finished.append(self._fail_lane(i, LaneFaultError(uid, i)))
+        m["faulted"][:] = False
+        self._dirty = True
+
+    def _cancel_expired(self, finished: list[GenResult]) -> None:
+        """SLA-deadline enforcement (``enforce_deadlines=True``): a
+        lane whose absolute deadline passed is cancelled at this host
+        sync — its pages free, the remaining lanes' device state (and
+        token streams) are bitwise-unchanged."""
+        now = time.monotonic()
+        for i in self.active_lanes:
+            req = self.lanes[i].req
+            if req.deadline_at is not None and now > req.deadline_at:
+                self.stats["deadline_cancelled"] += 1
+                self.stats["cancelled"] += 1
+                finished.append(
+                    self._fail_lane(i, DeadlineExceededError(req.uid)))
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request wherever it currently lives — queued,
+        decoding on a lane, or frozen preempted — releasing every
+        resource it held (lane, pages, offload record; prefix-cache
+        state stays consistent: cancelled work is never donated). The
+        failure surfaces as a ``RequestCancelledError`` GenResult at
+        the next step. Idempotent: False when the uid is not in flight
+        (already finished, or never submitted)."""
+        req = None
+        if hasattr(self.scheduler, "remove"):
+            req = self.scheduler.remove(uid)
+        if req is not None:
+            self.stats["cancelled"] += 1
+            self._pending_results.append(
+                self._failed_result(req, [], RequestCancelledError(uid)))
+            return True
+        for j, pre in enumerate(self._preempted):
+            if pre.req.uid == uid:
+                self._preempted.pop(j)
+                self._offload.drop(uid)
+                if pre.pinned:
+                    self.pool.release(list(pre.pinned.values()))
+                self.stats["cancelled"] += 1
+                self._pending_results.append(self._failed_result(
+                    pre.req, pre.generated, RequestCancelledError(uid)))
+                return True
+        for i in self.active_lanes:
+            if self.lanes[i].req.uid == uid:
+                self.stats["cancelled"] += 1
+                self._pending_results.append(
+                    self._fail_lane(i, RequestCancelledError(uid)))
+                return True
+        return False
 
     # ---------------------------------------------------------- preemption
     def _download_pages(self, pages: list[int]):
@@ -661,11 +865,26 @@ class Engine:
         own = iter(self.pool.alloc(own_need))
         pages = [pre.pinned[j] if j in pre.pinned else next(own)
                  for j in range(pre.n_pages)]
-        rec = self._offload.pop(pre.req.uid)
+        try:
+            rec = self._offload.pop(pre.req.uid)
+        except OffloadCorruptionError as e:
+            # the parked KV rotted in host RAM: this request fails
+            # structurally (its checksummed record is gone), everyone
+            # else is untouched — release everything the lane held
+            # (own pages at rc 1 free; pinned-shared ones just unpin)
+            self.pool.release(pages)
+            self._mirror["bt"][i] = 0
+            self.stats["lanes_quarantined"] += 1
+            self._pending_results.append(self._failed_result(
+                pre.req, pre.generated,
+                LaneFaultError(pre.req.uid, -1, reason=str(e))))
+            return True          # entry resolved: _try_restore pops it
         if rec is not None:   # None: every live page was pinned-shared
             dst = [pages[j] for j in rec.logical]
             self._upload_pages(dst, rec.k, rec.v)
             self.stats["restored_pages"] += len(dst)
+            if pre.recovered:
+                self.stats["recovered_zero_reprefill"] += 1
         self.lanes[i] = _Lane(pre.req, pre.offset, pre.generated,
                               pages=pages, token_times=pre.token_times)
         m = self._mirror
@@ -740,7 +959,13 @@ class Engine:
                                                self.lanes[i].req._seq))
             if free_lane and short > 0 and self._releasable(victim) == 0:
                 return did
-            self.preempt(victim)
+            try:
+                self.preempt(victim)
+            except OffloadCapacityError:
+                # host store full: the victim keeps running (preempt
+                # raises before mutating anything) and the head waits
+                # for capacity the normal way
+                return did
             did = True
 
     # ----------------------------------------------------------- admission
@@ -782,23 +1007,36 @@ class Engine:
         width = max(r.prompt_len for r in reqs)
         new_lanes = []
         m = self._mirror
-        for r in reqs:
-            i = free.pop(0)
-            off = width - r.prompt_len
-            self.lanes[i] = _Lane(r, off, [])
-            if self.paged:
-                need = self.pool.slots_for(
-                    min(max(width + r.max_new_tokens - 1, width),
-                        self.max_len))
-                self.lanes[i].pages = self.pool.alloc(need)
-                m["bt"][i] = 0
-                m["bt"][i, :need] = self.lanes[i].pages
-            m["offsets"][i] = off
-            m["frontier"][i] = width
-            m["remaining"][i] = r.max_new_tokens - 1
-            m["pending"][i] = 0
-            m["live"][i] = True
-            new_lanes.append(i)
+        try:
+            for r in reqs:
+                i = free.pop(0)
+                off = width - r.prompt_len
+                self.lanes[i] = _Lane(r, off, [])
+                if self.paged:
+                    need = self.pool.slots_for(
+                        min(max(width + r.max_new_tokens - 1, width),
+                            self.max_len))
+                    self.lanes[i].pages = self.pool.alloc(need)
+                    m["bt"][i] = 0
+                    m["bt"][i, :need] = self.lanes[i].pages
+                m["offsets"][i] = off
+                m["frontier"][i] = width
+                m["remaining"][i] = r.max_new_tokens - 1
+                m["pending"][i] = 0
+                m["live"][i] = True
+                new_lanes.append(i)
+        except BaseException:
+            # crash-safe admission: a page-alloc failure mid-group must
+            # not LOSE requests — whatever never reached a lane goes
+            # back to the queue head (the one stranded on a half-built
+            # lane relaunches through supervisor recovery); the crash
+            # still propagates to the watchdog
+            placed = {self.lanes[j].req.uid for j in new_lanes}
+            placed.update(self.lanes[j].req.uid for j in range(
+                self.max_batch) if self.lanes[j] is not None)
+            self.scheduler.push_front(
+                [r for r in reqs if r.uid not in placed])
+            raise
         self._dirty = True     # one upload, in step() before the slab
         self._note_admitted(reqs)
 
@@ -883,10 +1121,17 @@ class Engine:
             len(free), self.pool.free_pages,
             lambda group: sum(self._page_cost([r]) for r in group))
         m = self._mirror
-        for r in reqs:
+        for j, r in enumerate(reqs):
             i = free.pop(0)
             need = self._page_cost([r])
-            self.lanes[i] = _Lane(r, 0, [], pages=self.pool.alloc(need))
+            try:
+                pages = self.pool.alloc(need)
+            except BaseException:
+                # crash-safe admission: un-placed requests go back to
+                # the queue head; the crash propagates to the watchdog
+                self.scheduler.push_front(reqs[j:])
+                raise
+            self.lanes[i] = _Lane(r, 0, [], pages=pages)
             m["bt"][i] = 0
             m["bt"][i, :need] = self.lanes[i].pages
             m["offsets"][i] = 0
@@ -920,7 +1165,13 @@ class Engine:
                                     self._page_cost_shared())
         tails: list[int] = []
         for j, r in enumerate(reqs):
-            if not self._admit_one(free[0], r):
+            try:
+                ok = self._admit_one(free[0], r)
+            except BaseException:
+                # crash-safe admission: see _admit_once
+                self.scheduler.push_front(reqs[j:])
+                raise
+            if not ok:
                 self.scheduler.push_front(reqs[j:])
                 break
             tails.append(free.pop(0))
@@ -948,7 +1199,11 @@ class Engine:
         if own_need > self.pool.free_pages:
             self.pool.release(m.pages + pin_tail)   # un-pin, re-queue
             return False
-        own = self.pool.alloc(own_need)
+        try:
+            own = self.pool.alloc(own_need)
+        except BaseException:
+            self.pool.release(m.pages + pin_tail)   # no pins leak
+            raise
         if m.tail_page is not None:
             # copy-on-write: the lane keeps writing this page (prompt
             # tail, then decode) — give it a private copy; the shared
@@ -1017,9 +1272,25 @@ class Engine:
         either ONE fused decode+prefill call (whenever the token-budget
         planner assigned prompt chunks) or a decode slab (no prompt in
         flight — full slab throughput between admissions). Returns
-        requests finished during this step."""
-        finished: list[GenResult] = []
+        requests finished during this step — successes AND structured
+        failures (quarantined / cancelled / expired), plus any failure
+        results parked by out-of-band paths (cancel, recovery) since
+        the last step.
+
+        An installed ``FaultPlan`` fires here: host-side faults at the
+        top (before any mutation — a crash leaves the engine at the
+        previous step's consistent host-sync snapshot, which is what
+        makes supervisor recovery possible), device-side faults at the
+        jitted call sites."""
+        idx = self._step_idx
+        self._step_idx += 1
+        if self._faults is not None:
+            self._faults.on_step(idx, self)
+        finished: list[GenResult] = self._pending_results
+        self._pending_results = []
         self._sweep_finished(finished)
+        if self.enforce_deadlines:
+            self._cancel_expired(finished)
         if self._preempted:
             self._try_restore()    # older work first, unless outranked
         self._admit()
@@ -1035,16 +1306,21 @@ class Engine:
                 self._run_mixed(decode_lanes, plan)
             elif decode_lanes:
                 self._decode_slab()
-            return finished
-        if not self.active_lanes:
-            return finished
-        self._decode_slab()
+        elif self.active_lanes:
+            self._decode_slab()
+        self._harvest_faults(finished)
+        # failures parked DURING this step (e.g. a corrupted offload
+        # record hit by _try_restore) come out with it, not one late
+        finished.extend(self._pending_results)
+        self._pending_results = []
         return finished
 
     def _decode_slab(self) -> None:
         """One decode slab: the on-device ``lax.scan`` token loop, one
         host sync per ``slab_k`` steps."""
         self._sync_dstate()
+        if self._faults is not None:
+            self._faults.on_device_step(self._step_idx - 1, self)
         t0 = time.monotonic()
         if self.paged:
             fmax = int(max(self._mirror["frontier"][i]
@@ -1104,20 +1380,28 @@ class Engine:
                         if j not in covered):
             self.stats["stalled_decode_steps"] += 1
         r = _pow2_bucket(self.pool.slots_for(need), self.max_pages)
+        if self._faults is not None:
+            self._faults.on_device_step(self._step_idx - 1, self)
         t0 = time.monotonic()
-        nxt, self.cache = self._mixed_fn(
+        nxt, faulted, self.cache = self._mixed_fn(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(starts), jnp.asarray(q_lens),
             jnp.asarray(m["offsets"]), jnp.asarray(m["bt"]),
-            read_pages=r)
+            read_pages=r, poison=jnp.asarray(m["poison"]))
+        m["poison"][:] = 0.0         # one-shot, like the slab's carry
         # the host only needs the token vector when somebody emits a
         # token this call (a decode lane, or a prompt finishing its
         # tail); mid-prompt-only calls stay ASYNC so consecutive chunk
-        # dispatches pipeline like the phased prefill loop's
+        # dispatches pipeline like the phased prefill loop's — the
+        # finite-check verdict is read at the same syncs (a fault in a
+        # non-emitting chunk poisons the KV it wrote, so the NEXT
+        # emitting call's check still catches that lane)
+        fa = None
         if decode_lanes or any(self._prefilling[i] + c
                                >= self.lanes[i].req.prompt_len
                                for i, c in plan.items()):
             nxt = np.asarray(jax.block_until_ready(nxt))
+            fa = np.asarray(faulted)
         now = time.monotonic()
         if self.mixed:
             self.stats["mixed_steps"] += 1
@@ -1136,6 +1420,13 @@ class Engine:
             self.stats["prefill_chunks"] += 1
             self.stats["prefill_tokens"] += sum(plan.values())
         for i in decode_lanes:
+            if fa is not None and fa[i]:
+                # non-finite logits: freeze the lane (frontier does not
+                # advance, the garbage token is never kept) and leave
+                # the verdict for _harvest_faults to quarantine
+                m["faulted"][i] = True
+                m["live"][i] = False
+                continue
             t = int(nxt[i])
             self.lanes[i].generated.append(t)
             self.lanes[i].token_times.append(now)
@@ -1153,6 +1444,9 @@ class Engine:
                 self._prefilling[i] = pos
                 continue
             del self._prefilling[i]      # tail landed: first token out
+            if fa is not None and fa[i]:
+                m["faulted"][i] = True
+                continue
             first = int(nxt[i])
             self.lanes[i].generated.append(first)
             self.lanes[i].token_times.append(now)
@@ -1182,7 +1476,7 @@ class Engine:
         """Drain the queue and all active lanes; {uid: GenResult}."""
         out: dict[int, GenResult] = {}
         while (len(self.scheduler) or self.active_lanes
-               or self._preempted):
+               or self._preempted or self._pending_results):
             for r in self.step():
                 out[r.uid] = r
         self.finalize_stats()
@@ -1228,6 +1522,14 @@ class Engine:
             self.scheduler, "rejections", 0)
         self.stats["admission_rejected_steps"] = getattr(
             self.scheduler, "rejected_steps", 0)
+        if getattr(self, "_offload", None) is not None:
+            self.stats["offload_bytes_peak"] = max(
+                self.stats["offload_bytes_peak"],
+                self._offload.bytes_peak)
+            # peak vs the configured byte budget (0 = unbounded): the
+            # host-RAM headroom dashboards watch
+            self.stats["offload_capacity_bytes"] = (
+                self._offload.capacity_bytes or 0)
         if self.pcache is not None:
             self.stats["prefix_hit_rate"] = (
                 self.stats["prefill_tokens_skipped"]

@@ -1,0 +1,276 @@
+"""Deterministic fault injection + the serving stack's failure taxonomy.
+
+BLaST's cost story (2.9x cheaper inference) only survives production if
+a fault costs one request, not the whole batch: a single non-finite
+logit, a hung device step, or an exception on the engine thread must not
+kill every in-flight request and drop all KV state into re-prefill.
+This module is the TEST SUBSTRATE for that property — a seeded
+``FaultPlan`` the engine consults at fixed points so chaos tests are
+bitwise-reproducible — plus the structured error types every failure
+path raises (one vocabulary across engine, frontend, and tests).
+
+Fault points (all keyed by the ENGINE STEP index — one ``Engine.step``
+call; the host syncs at most once per step, so that is the finest
+deterministic granularity):
+
+  * ``poison_logits(step, lane)``  — corrupt one lane's logits to
+    NaN/Inf at the first in-slab decode step of engine step ``step``
+    (the per-lane finite check in serving/step.py must quarantine ONLY
+    that lane);
+  * ``fail_alloc(step)``           — the next page allocation raises
+    (an engine-thread crash the watchdog recovers from);
+  * ``crash(step)``                — raise from the step: host-side
+    crash (``device_lost=False``, device arrays intact — recovery may
+    salvage live KV to the host) or simulated device loss
+    (``device_lost=True`` — all on-device KV is gone);
+  * ``stall(step, seconds)``       — the jitted step hangs; the
+    watchdog's heartbeat deadline must notice and tear the thread down
+    (the stall aborts with ``EngineHangError`` once the supervisor
+    condemns the engine — the in-process stand-in for killing a wedged
+    device call);
+  * ``corrupt_offload(nth_save)``  — bit-flip one page of the nth
+    record saved to the host offload store AFTER its checksums were
+    computed; the restore-side verify must fail only that request.
+
+Every fault that actually fires increments the engine's
+``faults_injected`` counter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+# --------------------------------------------------------------- errors
+class ServingFault(Exception):
+    """Base class for every structured serving failure."""
+
+
+class LaneFaultError(ServingFault):
+    """One lane's computation produced non-finite logits (or its
+    restored KV failed verification): ONLY this request fails — its
+    lane is quarantined, its pages freed, and its sequence is never
+    donated to the prefix cache."""
+
+    def __init__(self, uid: int, lane: int, reason: str = "non-finite "
+                 "logits"):
+        self.uid, self.lane, self.reason = uid, lane, reason
+        super().__init__(f"request {uid} quarantined on lane {lane}: "
+                         f"{reason}")
+
+
+class EngineCrashError(ServingFault):
+    """The engine stepper thread died; ``device_lost`` says whether
+    on-device KV survived (host-side crash) or not (device loss)."""
+
+    def __init__(self, msg: str = "engine step crashed",
+                 device_lost: bool = False):
+        self.device_lost = device_lost
+        super().__init__(msg)
+
+
+class EngineHangError(EngineCrashError):
+    """A step overran the watchdog's hung-step deadline and the
+    supervisor condemned the engine (device state is not trusted to be
+    mid-write consistent, but host arrays survive)."""
+
+    def __init__(self, msg: str = "engine step exceeded the watchdog "
+                 "deadline"):
+        super().__init__(msg, device_lost=False)
+
+
+class OffloadCorruptionError(ServingFault):
+    """A host-offloaded KV page failed its checksum on restore."""
+
+    def __init__(self, uid: int, logical: list[int]):
+        self.uid, self.logical = uid, list(logical)
+        super().__init__(
+            f"offloaded KV for request {uid} failed checksum on "
+            f"logical page(s) {self.logical}")
+
+
+class OffloadCapacityError(ServingFault):
+    """The host offload store's byte budget cannot hold another
+    record; the preemption (or crash salvage) that needed it must fall
+    back — never silently overrun host RAM."""
+
+    def __init__(self, needed: int, capacity: int, used: int):
+        self.needed, self.capacity, self.used = needed, capacity, used
+        super().__init__(
+            f"host KV store over capacity: record of {needed} bytes "
+            f"does not fit ({used} of {capacity} bytes used)")
+
+
+class BackpressureError(ServingFault):
+    """Load shedding: the admission queue is at its bound; retry after
+    ``retry_after_s`` (a service-rate estimate, not a promise)."""
+
+    def __init__(self, queue_depth: int, limit: int,
+                 retry_after_s: float):
+        self.queue_depth, self.limit = queue_depth, limit
+        self.retry_after_s = retry_after_s
+        super().__init__(
+            f"admission queue full ({queue_depth} >= {limit}); "
+            f"retry after {retry_after_s:.2f}s")
+
+
+class RequestCancelledError(ServingFault):
+    """The request was cancelled (client cancel or engine shutdown)."""
+
+    def __init__(self, uid: int, reason: str = "cancelled"):
+        self.uid, self.reason = uid, reason
+        super().__init__(f"request {uid} {reason}")
+
+
+class DeadlineExceededError(RequestCancelledError):
+    """The request's SLA deadline passed while it was still decoding;
+    the engine cancelled it at the next host sync."""
+
+    def __init__(self, uid: int):
+        super().__init__(uid, "cancelled: SLA deadline exceeded "
+                              "mid-decode")
+
+
+# ------------------------------------------------------------ the plan
+@dataclasses.dataclass
+class _Poison:
+    step: int
+    lane: int
+    kind: str          # "nan" | "inf"
+
+
+@dataclasses.dataclass
+class _Crash:
+    step: int
+    device_lost: bool
+
+
+@dataclasses.dataclass
+class _Stall:
+    step: int
+    seconds: float
+
+
+class FaultPlan:
+    """A seeded, replayable schedule of injected faults.
+
+    Build one, arm faults at chosen engine-step indices, and hand it to
+    ``Engine(faults=plan)`` (or ``engine.install_faults(plan)``). The
+    plan is consumed as it fires — rerunning the same plan instance
+    against a second engine requires a fresh plan (build two from the
+    same seed for A/B runs). ``seed`` feeds ``rng`` for tests that want
+    randomized-but-reproducible targets (e.g. picking a victim lane);
+    the plan itself never draws from it implicitly."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self._poisons: list[_Poison] = []
+        self._crashes: list[_Crash] = []
+        self._stalls: list[_Stall] = []
+        self._alloc_steps: set[int] = set()
+        self._alloc_armed = False
+        self._corrupt_saves: dict[int, int] = {}   # nth save -> bit
+        self._n_saves = 0
+        self._engine = None            # set by Engine.install_faults
+        self.fired: list[str] = []     # audit trail, in firing order
+
+    # ----------------------------------------------------------- arming
+    def poison_logits(self, step: int, lane: int,
+                      kind: str = "nan") -> "FaultPlan":
+        assert kind in ("nan", "inf")
+        self._poisons.append(_Poison(step, lane, kind))
+        return self
+
+    def fail_alloc(self, step: int) -> "FaultPlan":
+        self._alloc_steps.add(step)
+        return self
+
+    def crash(self, step: int, device_lost: bool = False) -> "FaultPlan":
+        self._crashes.append(_Crash(step, device_lost))
+        return self
+
+    def stall(self, step: int, seconds: float) -> "FaultPlan":
+        self._stalls.append(_Stall(step, seconds))
+        return self
+
+    def corrupt_offload(self, nth_save: int = 0,
+                        bit: int = 0) -> "FaultPlan":
+        self._corrupt_saves[nth_save] = bit
+        return self
+
+    # ------------------------------------------------------ engine hooks
+    def on_step(self, idx: int, engine) -> None:
+        """Called at the top of ``Engine.step`` (before any mutation):
+        arms this step's logit poison into the device-state mirror,
+        arms a one-shot page-allocation failure, and raises host-side
+        crashes. Device-loss crashes and stalls fire later, at the
+        jitted-step call site (``on_device_step``)."""
+        for p in [p for p in self._poisons if p.step == idx]:
+            self._poisons.remove(p)
+            val = np.nan if p.kind == "nan" else np.inf
+            engine._mirror["poison"][p.lane] = val
+            engine._dirty = True
+            engine.stats["faults_injected"] += 1
+            self.fired.append(f"poison:{p.kind}@{idx}:lane{p.lane}")
+        if idx in self._alloc_steps:
+            self._alloc_steps.discard(idx)
+            self._alloc_armed = True
+            engine.stats["faults_injected"] += 1
+            self.fired.append(f"alloc_fail@{idx}")
+        for c in [c for c in self._crashes if c.step == idx
+                  and not c.device_lost]:
+            self._crashes.remove(c)
+            engine.stats["faults_injected"] += 1
+            self.fired.append(f"crash:host@{idx}")
+            raise EngineCrashError(
+                f"injected host-side crash at step {idx}",
+                device_lost=False)
+
+    def on_device_step(self, idx: int, engine) -> None:
+        """Called immediately before a jitted slab/mixed call: simulated
+        device loss raises here; a stall sleeps past the watchdog
+        deadline, aborting with ``EngineHangError`` the moment the
+        supervisor condemns the engine (``engine._condemned``)."""
+        for c in [c for c in self._crashes if c.step == idx
+                  and c.device_lost]:
+            self._crashes.remove(c)
+            engine.stats["faults_injected"] += 1
+            self.fired.append(f"crash:device@{idx}")
+            raise EngineCrashError(
+                f"injected device loss at step {idx}", device_lost=True)
+        for s in [s for s in self._stalls if s.step == idx]:
+            self._stalls.remove(s)
+            engine.stats["faults_injected"] += 1
+            self.fired.append(f"stall@{idx}:{s.seconds}s")
+            deadline = time.monotonic() + s.seconds
+            while time.monotonic() < deadline:
+                if engine._condemned.is_set():
+                    raise EngineHangError()
+                time.sleep(min(0.01, s.seconds))
+
+    def on_alloc(self, n: int) -> bool:
+        """Page-pool hook (pages.py): True -> this allocation fails."""
+        if self._alloc_armed:
+            self._alloc_armed = False
+            return True
+        return False
+
+    def on_offload_save(self, rec) -> None:
+        """Host-store hook (offload.py), called AFTER checksums were
+        computed: bit-flip the first element of the record's first
+        page so the restore-side verify must catch it."""
+        nth = self._n_saves
+        self._n_saves += 1
+        if nth not in self._corrupt_saves:
+            return
+        bit = self._corrupt_saves.pop(nth)
+        k = np.array(rec.k, copy=True)          # device downloads are
+        flat = k.reshape(-1).view(np.uint8)     # often read-only views
+        flat[0] ^= np.uint8(1 << (bit % 8))
+        rec.k = k
+        if self._engine is not None:
+            self._engine.stats["faults_injected"] += 1
+        self.fired.append(f"bitflip:save{nth}")

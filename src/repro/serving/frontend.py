@@ -15,35 +15,55 @@ streams tokens back out as slabs / mixed steps complete.
 
 Concurrency model — deliberately minimal, no locks:
 
-  * the EVENT LOOP side only appends to a plain deque inbox and sets a
-    ``threading.Event`` (both atomic under the GIL) — ``submit_async``
-    never blocks the loop on engine work;
+  * the EVENT LOOP side only appends to plain deques (inbox, cancels)
+    and sets a ``threading.Event`` (all atomic under the GIL) —
+    ``submit_async`` never blocks the loop on engine work;
   * the ENGINE THREAD owns the engine exclusively: it drains the inbox
-    (calling ``engine.submit`` — infeasible requests reject there and
-    the error is routed back through the caller's future), steps the
-    engine while any work is in flight, and pushes newly generated
-    tokens to each request's stream;
+    (calling ``engine.submit`` — infeasible or load-shed requests
+    reject there and the error is routed back through the caller's
+    future), steps the engine while any work is in flight, and pushes
+    newly generated tokens to each request's stream;
   * every hop back to the loop goes through
     ``loop.call_soon_threadsafe`` — the ONLY asyncio-sanctioned
     cross-thread entry point.
+
+Fault tolerance (serving/faults.py + recovery.py): a WATCHDOG thread
+(``watchdog_s`` / ``max_recoveries``) heartbeats the stepper. When the
+stepper dies (any exception) or a step overruns the hung-step deadline,
+the watchdog tears it down, runs ``Supervisor.recover`` — salvaging
+live lanes' KV to the host store so they resume with zero re-prefilled
+tokens, relaunching the rest deterministically — and restarts stepping;
+open streams just see a pause. Only when the recovery budget is
+exhausted (or recovery itself fails) do the remaining streams fail with
+the structured error. A request that fails individually (quarantined
+lane, cancellation, SLA deadline) surfaces as that ONE stream raising
+its structured error; everyone else streams on, bitwise-unchanged.
 
 Tokens stream per-request with slab granularity: the engine syncs the
 host once per decode slab (``slab_k`` tokens) or mixed step, so that is
 the natural flush unit — each ``__anext__`` yields the batch of tokens
 that landed at one sync. Backpressure is the engine's own admission
-control (lanes + page gate + SLA scheduler); the front end adds none.
+control (lanes + page gate + SLA scheduler + bounded-queue load
+shedding); the front end adds none.
 
 ``await front.aclose()`` (or leaving the ``async with``) drains all
-in-flight work, then joins the thread and finalizes engine stats —
-``engine.stats`` is complete afterwards.
+in-flight work, then joins the threads and finalizes engine stats —
+``engine.stats`` is complete afterwards. Any stream still unfinished at
+teardown (a crashed engine past its recovery budget, or inbox entries
+that never submitted) is failed with ``RequestCancelledError`` instead
+of hanging its consumer forever.
 """
 from __future__ import annotations
 
 import asyncio
 import threading
+import time
 from collections import deque
 
 import numpy as np
+
+from repro.serving.faults import EngineHangError, RequestCancelledError
+from repro.serving.recovery import Supervisor
 
 _DONE = object()
 
@@ -53,15 +73,18 @@ class TokenStream:
 
     Async-iterating yields ``list[int]`` batches (one per engine host
     sync — slab-granular); ``await stream.result()`` returns the
-    engine's ``GenResult`` once the request finishes. Created by
-    ``AsyncEngine.submit_async``; all mutation happens on the engine
-    thread through the ``*_threadsafe`` methods."""
+    engine's ``GenResult`` once the request finishes, or raises its
+    structured error if it failed (quarantine / cancel / deadline).
+    Created by ``AsyncEngine.submit_async``; all mutation happens on
+    the engine thread through the ``*_threadsafe`` methods."""
 
     def __init__(self, loop: asyncio.AbstractEventLoop):
         self._loop = loop
         self._q: asyncio.Queue = asyncio.Queue()
         self._submitted = loop.create_future()   # -> uid, or raises
         self._result = loop.create_future()      # -> GenResult
+        self._front: "AsyncEngine | None" = None
+        self._cancelled = False
 
     @property
     def uid(self) -> int:
@@ -79,11 +102,12 @@ class TokenStream:
         self._call(lambda: self._submitted.set_result(uid))
 
     def _reject_threadsafe(self, exc: BaseException) -> None:
-        # submit-time rejection (infeasible request): the exception
-        # surfaces from ``await submit_async`` — the stream is never
-        # handed to the caller, so the result future just closes
+        # submit-time rejection (infeasible or load-shed request): the
+        # exception surfaces from ``await submit_async`` — the stream is
+        # never handed to the caller, so the result future just closes
         def fail():
-            self._submitted.set_exception(exc)
+            if not self._submitted.done():
+                self._submitted.set_exception(exc)
             if not self._result.done():
                 self._result.set_result(None)
             self._q.put_nowait(_DONE)
@@ -100,7 +124,10 @@ class TokenStream:
         self._call(fin)
 
     def _fail_threadsafe(self, exc: BaseException) -> None:
-        # engine-thread crash mid-run: every open stream raises
+        # structured per-request failure, engine crash past its
+        # recovery budget, or shutdown sweep: iteration ends and
+        # ``result()`` raises. No-op on an already-finished stream —
+        # that is what makes the shutdown sweep and double-cancel safe.
         def fail():
             if not self._submitted.done():
                 self._submitted.set_exception(exc)
@@ -120,8 +147,37 @@ class TokenStream:
         return item
 
     async def result(self):
-        """The engine's ``GenResult`` (awaits completion)."""
+        """The engine's ``GenResult`` (awaits completion); raises the
+        structured error when the request failed."""
         return await self._result
+
+    async def cancel(self) -> None:
+        """Cancel this request wherever it is — still in the inbox,
+        queued, decoding, or preempted. The engine frees its lane and
+        pages (nothing is donated to the prefix cache) and the stream
+        ends with ``RequestCancelledError`` swallowed here. Idempotent:
+        safe to call twice, or after the request already finished (then
+        it does nothing)."""
+        if self._front is None or self._result.done():
+            return
+        self._cancelled = True
+        if self._submitted.done():
+            if self._submitted.exception() is None:
+                self._front._cancels.append(self._submitted.result())
+        else:
+            # not yet submitted: the drain rejects flagged entries; if
+            # submission already raced past the flag, route the cancel
+            # once the uid lands
+            def _then(fut):
+                if not fut.cancelled() and fut.exception() is None:
+                    self._front._cancels.append(fut.result())
+                    self._front._wake.set()
+            self._submitted.add_done_callback(_then)
+        self._front._wake.set()
+        try:
+            await self._result
+        except Exception:
+            pass     # the cancellation (or any racing failure) itself
 
 
 class AsyncEngine:
@@ -130,27 +186,58 @@ class AsyncEngine:
     The engine must not be driven by anyone else while the front end
     owns it. ``idle_wait_s`` bounds the idle-poll latency between a
     submission landing in the inbox and the thread noticing (the wake
-    event short-circuits it; the timeout is only the safety net)."""
+    event short-circuits it; the timeout is only the safety net).
 
-    def __init__(self, engine, *, idle_wait_s: float = 0.002):
+    ``watchdog_s`` arms the hung-step deadline: a step stuck past it is
+    condemned and recovered. ``max_recoveries`` bounds how many times
+    the supervisor may rebuild the engine after crashes/hangs before
+    giving up and failing the remaining streams (0 = legacy behavior:
+    first crash fails everything). ``recovery_log`` keeps one summary
+    dict per recovery (latency, lanes salvaged/relaunched)."""
+
+    def __init__(self, engine, *, idle_wait_s: float = 0.002,
+                 watchdog_s: float | None = None,
+                 max_recoveries: int = 0):
         self.engine = engine
         self._idle_wait_s = idle_wait_s
         # deque.append / popleft are GIL-atomic: the loop side appends,
         # the engine thread pops — no lock needed
         self._inbox: deque = deque()
+        self._cancels: deque = deque()
         self._wake = threading.Event()
         self._stop = False
         self._thread: threading.Thread | None = None
         self._streams: dict[int, TokenStream] = {}
         self._sent: dict[int, int] = {}   # uid -> tokens already pushed
+        # watchdog / recovery state
+        self._watchdog_s = watchdog_s
+        self._max_recoveries = max_recoveries
+        self._recoveries = 0
+        self.recovery_log: list[dict] = []
+        self._beat = time.monotonic()
+        self._busy = False
+        self._crash: BaseException | None = None
+        self._monitor: threading.Thread | None = None
+        self._mon_stop = threading.Event()
 
     # ------------------------------------------------------ lifecycle
+    def _recovery_enabled(self) -> bool:
+        return (self._recoveries < self._max_recoveries
+                and self._monitor is not None and not self._stop)
+
     def start(self) -> "AsyncEngine":
         if self._thread is None:
             self._stop = False
             self._thread = threading.Thread(
                 target=self._run, name="serving-engine", daemon=True)
             self._thread.start()
+        if (self._monitor is None
+                and (self._watchdog_s is not None
+                     or self._max_recoveries > 0)):
+            self._mon_stop.clear()
+            self._monitor = threading.Thread(
+                target=self._watch, name="serving-watchdog", daemon=True)
+            self._monitor.start()
         return self
 
     async def __aenter__(self) -> "AsyncEngine":
@@ -160,29 +247,50 @@ class AsyncEngine:
         await self.aclose()
 
     async def aclose(self) -> None:
-        """Drain all in-flight work, stop the engine thread, finalize
-        engine stats. Submissions after this raise."""
+        """Drain all in-flight work, stop the engine + watchdog
+        threads, finalize engine stats, and fail any stream that could
+        no longer finish (crashed engine past its recovery budget,
+        never-submitted inbox entries) so no consumer hangs. Safe to
+        call twice. Submissions after this raise."""
         self._stop = True
         self._wake.set()
+        loop = asyncio.get_running_loop()
+        # monitor first: no recovery may restart a stepper under us
+        if self._monitor is not None:
+            self._mon_stop.set()
+            await loop.run_in_executor(None, self._monitor.join)
+            self._monitor = None
+        self.engine._condemned.set()   # abort a wedged device call
         if self._thread is not None:
-            loop = asyncio.get_running_loop()
             await loop.run_in_executor(None, self._thread.join)
             self._thread = None
+        self.engine._condemned.clear()
+        # the drain loop completes every completable request; whatever
+        # is left can only be finalized by failing it
+        leftovers = list(self._streams.values())
+        self._streams.clear()
+        self._sent.clear()
+        while self._inbox:
+            leftovers.append(self._inbox.popleft()[-1])
+        exc = RequestCancelledError(-1, "cancelled: engine shut down")
+        for s in leftovers:
+            s._fail_threadsafe(exc)
 
     # --------------------------------------------------------- submit
     async def submit_async(self, prompt, max_new_tokens: int = 32, *,
                            priority: int = 0,
                            deadline_s: float | None = None) -> TokenStream:
         """Queue one request; resolves once the engine accepted it (an
-        infeasible request raises ``ValueError`` here, synchronously
-        with the engine's own submit semantics). ``priority`` /
-        ``deadline_s`` pass through to the scheduler — see
-        serving/scheduler.py."""
+        infeasible request raises ``ValueError`` here and a load-shed
+        one ``BackpressureError``, synchronously with the engine's own
+        submit semantics). ``priority`` / ``deadline_s`` pass through
+        to the scheduler — see serving/scheduler.py."""
         if self._thread is None or self._stop:
             raise RuntimeError(
                 "AsyncEngine is not running — use 'async with "
                 "AsyncEngine(engine)' or call start()")
         stream = TokenStream(asyncio.get_running_loop())
+        stream._front = self
         self._inbox.append((np.asarray(prompt, np.int32), max_new_tokens,
                             priority, deadline_s, stream))
         self._wake.set()
@@ -194,6 +302,10 @@ class AsyncEngine:
         eng = self.engine
         while self._inbox:
             prompt, mnt, prio, dl, stream = self._inbox.popleft()
+            if stream._cancelled:
+                stream._reject_threadsafe(RequestCancelledError(
+                    -1, "cancelled before submission"))
+                continue
             try:
                 uid = eng.submit(prompt, mnt, priority=prio,
                                  deadline_s=dl)
@@ -204,26 +316,45 @@ class AsyncEngine:
             self._sent[uid] = 0
             stream._submit_ok_threadsafe(uid)
 
+    def _drain_cancels(self) -> None:
+        while self._cancels:
+            self.engine.cancel(self._cancels.popleft())
+
+    def _has_work(self) -> bool:
+        eng = self.engine
+        return bool(eng.active_lanes or len(eng.scheduler)
+                    or getattr(eng, "_preempted", None)
+                    or getattr(eng, "_pending_results", None))
+
     def _pump(self, finished) -> None:
         """Push tokens that landed at this step's host sync: the delta
         of each live lane's ``generated`` past what was already sent
         (preempted lanes simply pause — their counter survives until
-        restore), then the finished requests' tails + results."""
+        restore; crash-relaunched lanes re-base against the tokens
+        emitted before the crash), then the finished requests' tails +
+        results — failed requests route their structured error."""
         eng = self.engine
+        recovered = getattr(eng, "_recovered_prefix", {})
         for i in eng.active_lanes:
             lane = eng.lanes[i]
             stream = self._streams.get(lane.req.uid)
             if stream is None:
                 continue
-            n = len(lane.generated)
-            if n > self._sent[lane.req.uid]:
-                stream._push_threadsafe(
-                    lane.generated[self._sent[lane.req.uid]:n])
-                self._sent[lane.req.uid] = n
+            gen = lane.generated
+            pre = recovered.get(lane.req.uid)
+            if pre is not None:
+                gen = list(pre[1]) + gen
+            sent = self._sent[lane.req.uid]
+            if len(gen) > sent:
+                stream._push_threadsafe(gen[sent:])
+                self._sent[lane.req.uid] = len(gen)
         for res in finished:
             stream = self._streams.pop(res.uid, None)
             sent = self._sent.pop(res.uid, 0)
             if stream is None:
+                continue
+            if res.error is not None:
+                stream._fail_threadsafe(res.error)
                 continue
             if len(res.generated) > sent:
                 stream._push_threadsafe(
@@ -234,19 +365,98 @@ class AsyncEngine:
         eng = self.engine
         try:
             while True:
+                self._beat = time.monotonic()
+                self._drain_cancels()
                 self._drain_inbox()
-                if (eng.active_lanes or len(eng.scheduler)
-                        or getattr(eng, "_preempted", None)):
-                    self._pump(eng.step())
+                if self._has_work():
+                    self._busy = True
+                    try:
+                        finished = eng.step()
+                    finally:
+                        self._busy = False
+                    self._pump(finished)
                 elif self._stop and not self._inbox:
                     break
                 else:
                     self._wake.wait(self._idle_wait_s)
                     self._wake.clear()
         except BaseException as e:
+            if self._recovery_enabled():
+                # die quietly with the crash stashed: streams stay
+                # open, the watchdog recovers and restarts stepping
+                self._crash = e
+                return
             for stream in list(self._streams.values()):
                 stream._fail_threadsafe(e)
             self._streams.clear()
             raise
         finally:
             eng.finalize_stats()
+
+    # ------------------------------------------------- watchdog thread
+    def _watch(self) -> None:
+        """Heartbeat monitor: recovers a DEAD stepper (crash stashed by
+        ``_run``) and condemns+recovers a HUNG one (a step running past
+        ``watchdog_s``). Runs until aclose; every recovery spends one
+        unit of ``max_recoveries``."""
+        poll = min(0.01, (self._watchdog_s or 1.0) / 4)
+        while not self._mon_stop.wait(poll):
+            t = self._thread
+            if t is None:
+                continue
+            if not t.is_alive():
+                crash, self._crash = self._crash, None
+                if crash is not None:
+                    self.engine.stats["engine_crashes"] += 1
+                    self._do_recover(crash)
+                continue
+            if (self._watchdog_s is not None and self._busy
+                    and time.monotonic() - self._beat > self._watchdog_s):
+                self.engine._condemned.set()
+                t.join(self._watchdog_s + 1.0)
+                if t.is_alive():
+                    # the step overran the deadline but the call did
+                    # not abort under condemnation: it is SLOW (a jit
+                    # compile, a long legitimate step), not wedged — an
+                    # in-process watchdog cannot kill a running device
+                    # call (a real deployment would kill the device
+                    # stream here). Stand down and give it a fresh
+                    # deadline window.
+                    self.engine._condemned.clear()
+                    self._beat = time.monotonic()
+                    continue
+                # the condemned thread is down. If it stashed its OWN
+                # exception (a crash raced the condemnation), that is
+                # the real cause — classify it as a crash, not a hang
+                crash, self._crash = self._crash, None
+                if crash is not None and not isinstance(crash,
+                                                        EngineHangError):
+                    self.engine.stats["engine_crashes"] += 1
+                    self._do_recover(crash)
+                else:
+                    self.engine.stats["watchdog_hangs"] += 1
+                    self._do_recover(EngineHangError())
+
+    def _do_recover(self, exc: BaseException) -> None:
+        """One supervisor pass + stepper restart (watchdog thread; the
+        stepper is confirmed dead, so the engine is ours to touch)."""
+        if self._recoveries >= self._max_recoveries or self._stop:
+            for s in list(self._streams.values()):
+                s._fail_threadsafe(exc)
+            self._streams.clear()
+            return
+        self._recoveries += 1
+        try:
+            summary = Supervisor(self.engine).recover(exc)
+        except BaseException as e2:
+            for s in list(self._streams.values()):
+                s._fail_threadsafe(e2)
+            self._streams.clear()
+            return
+        self.recovery_log.append(summary)
+        self._thread = None
+        self._stop = False
+        self._thread = threading.Thread(
+            target=self._run, name="serving-engine", daemon=True)
+        self._thread.start()
+        self._wake.set()

@@ -1,13 +1,15 @@
-"""Host-side KV offload store for lane preemption.
+"""Host-side KV offload store for lane preemption and crash recovery.
 
 Under page pressure the engine may PREEMPT a low-priority lane instead
 of leaving a more urgent request page-blocked: the lane's exclusively
 owned pages are downloaded (device -> host) here, released to the pool
 for the urgent admission, and scattered back into freshly allocated
 pages when the lane is restored — decode resumes at the saved frontier
-with zero re-prefilled tokens. This extends BLaST's memory story to
-multi-tenant serving: KV that would otherwise be recomputed (a full
-re-prefill) round-trips through host RAM instead.
+with zero re-prefilled tokens. Crash recovery (serving/recovery.py)
+uses the same store to salvage live lanes' KV across an engine-thread
+rebuild. This extends BLaST's memory story to multi-tenant serving: KV
+that would otherwise be recomputed (a full re-prefill) round-trips
+through host RAM instead.
 
 Only the BOOKKEEPING lives here; the device transfers are the engine's
 jitted gather/scatter steps (serving/step.py). Records are keyed by
@@ -16,12 +18,27 @@ restore can interleave offloaded pages with the ones that never left
 the device (prefix-cache-shared pages stay pinned through preemption —
 their refcount keeps the on-device KV alive and they are never
 offloaded while another reader holds them).
+
+Two hard edges, both structured errors (serving/faults.py):
+
+  * ``capacity_bytes`` bounds host residency — a ``save`` that would
+    overrun raises ``OffloadCapacityError`` BEFORE any bookkeeping, so
+    the caller's device state is untouched and it can fall back
+    (skip the preemption / re-prefill instead of salvage);
+  * every page is checksummed (crc32 over its K and V bytes) at save
+    and verified at ``pop`` — host-RAM corruption of a parked page
+    surfaces as ``OffloadCorruptionError`` naming the bad logical
+    pages, failing ONLY that request instead of silently feeding
+    garbage KV back into the pool.
 """
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
+
+from repro.serving.faults import OffloadCapacityError, OffloadCorruptionError
 
 
 @dataclasses.dataclass
@@ -30,27 +47,40 @@ class OffloadRecord:
 
     ``logical`` are the lane's logical page indices (positions in its
     block table) the arrays cover, in the same order as axis 1 of
-    ``k``/``v`` ((layers, n, page_size, kv, hd) each)."""
+    ``k``/``v`` ((layers, n, page_size, kv, hd) each). ``checksums``
+    holds one crc32 per page over that page's K then V bytes."""
     logical: list[int]
     k: np.ndarray
     v: np.ndarray
+    checksums: list[int] | None = None
 
     @property
     def nbytes(self) -> int:
         return self.k.nbytes + self.v.nbytes
 
+    def page_crc(self, i: int) -> int:
+        return zlib.crc32(np.ascontiguousarray(self.v[:, i]).tobytes(),
+                          zlib.crc32(
+                              np.ascontiguousarray(self.k[:, i]).tobytes()))
+
 
 class HostKVStore:
-    """uid -> OffloadRecord map with a bytes high-water mark.
+    """uid -> OffloadRecord map with capacity + integrity enforcement.
 
-    Deliberately dumb: no eviction, no spill-to-disk — host RAM is the
-    backing tier and the engine bounds residency (a record lives only
-    between a lane's preemption and its restore). ``bytes_peak`` is the
-    observability hook the benchmark reports."""
+    Deliberately dumb storage: no eviction, no spill-to-disk — host RAM
+    is the backing tier, ``capacity_bytes`` bounds it (None = legacy
+    unbounded), and the engine bounds residency (a record lives only
+    between a lane's preemption/salvage and its restore).
+    ``bytes_peak`` is the observability hook the benchmark reports
+    against the limit. ``fault_hook`` (serving/faults.py) is called
+    with each record AFTER its checksums are computed — the chaos
+    suite's bit-flip port, standing in for real host-memory rot."""
 
-    def __init__(self):
+    def __init__(self, capacity_bytes: int | None = None):
         self._recs: dict[int, OffloadRecord] = {}
+        self.capacity_bytes = capacity_bytes
         self.bytes_peak = 0
+        self.fault_hook = None
 
     def __len__(self) -> int:
         return len(self._recs)
@@ -66,16 +96,64 @@ class HostKVStore:
              v: np.ndarray) -> None:
         """Stash a preempted lane's downloaded pages. One record per
         uid — a lane cannot be preempted twice without a restore in
-        between (the engine clears the lane at preemption)."""
+        between (the engine clears the lane at preemption). Raises
+        ``OffloadCapacityError`` (with no state change) when the byte
+        budget cannot hold the record."""
         assert uid not in self._recs, f"uid {uid} already offloaded"
         assert k.shape[1] == len(logical) and v.shape[1] == len(logical)
-        self._recs[uid] = OffloadRecord(list(logical), k, v)
+        rec = OffloadRecord(list(logical), k, v)
+        if (self.capacity_bytes is not None
+                and self.nbytes + rec.nbytes > self.capacity_bytes):
+            raise OffloadCapacityError(rec.nbytes, self.capacity_bytes,
+                                       self.nbytes)
+        rec.checksums = [rec.page_crc(i) for i in range(len(logical))]
+        if self.fault_hook is not None:
+            self.fault_hook(rec)
+        self._recs[uid] = rec
         self.bytes_peak = max(self.bytes_peak, self.nbytes)
 
     def pop(self, uid: int) -> OffloadRecord | None:
-        """Take (and drop) the record for ``uid``; None when the lane
-        had nothing to offload (every live page was pinned-shared)."""
-        return self._recs.pop(uid, None)
+        """Take (and drop) the record for ``uid``, verifying every
+        page's checksum; None when the lane had nothing to offload
+        (every live page was pinned-shared). A failed verify raises
+        ``OffloadCorruptionError`` — the record is already dropped, so
+        the engine fails that one request and moves on."""
+        rec = self._recs.pop(uid, None)
+        if rec is None:
+            return None
+        if rec.checksums is not None:
+            bad = [lg for i, lg in enumerate(rec.logical)
+                   if rec.page_crc(i) != rec.checksums[i]]
+            if bad:
+                raise OffloadCorruptionError(uid, bad)
+        return rec
+
+    def extend(self, uid: int, logical: list[int], k: np.ndarray,
+               v: np.ndarray) -> None:
+        """Append extra pages to an EXISTING record (crash salvage of a
+        lane whose shared pages were pinned on-device at preemption:
+        the device is going away, so the pinned remainder joins the
+        offloaded pages). Same capacity/checksum discipline as save."""
+        rec = self._recs[uid]
+        add_bytes = k.nbytes + v.nbytes
+        if (self.capacity_bytes is not None
+                and self.nbytes + add_bytes > self.capacity_bytes):
+            raise OffloadCapacityError(add_bytes, self.capacity_bytes,
+                                       self.nbytes)
+        merged = OffloadRecord(
+            rec.logical + list(logical),
+            np.concatenate([rec.k, k], axis=1),
+            np.concatenate([rec.v, v], axis=1))
+        merged.checksums = [merged.page_crc(i)
+                            for i in range(len(merged.logical))]
+        if self.fault_hook is not None:
+            self.fault_hook(merged)
+        self._recs[uid] = merged
+        self.bytes_peak = max(self.bytes_peak, self.nbytes)
+
+    def drop(self, uid: int) -> None:
+        """Discard a record without restoring it (cancelled request)."""
+        self._recs.pop(uid, None)
 
     def reset_peaks(self) -> None:
         self.bytes_peak = max(self.nbytes, 0)

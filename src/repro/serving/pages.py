@@ -54,6 +54,10 @@ class PagePool:
         self._n_ref = 0                   # pages with rc > 0
         self._n_cached_idle = 0           # cached pages with rc == 0
         self.peak_in_use = 0
+        # fault-injection port (serving/faults.py): called with the
+        # request size at the top of alloc; returning True fails that
+        # one allocation as if the free list could not supply it
+        self.fault_hook = None
         # high-water of REFERENCED pages: what live lanes pin at once.
         # This is the memory a rightsized pool must provide (cached-idle
         # pages are reclaimable on demand), and the apples-to-apples
@@ -117,6 +121,9 @@ class PagePool:
         the free list can't supply them (the engine's admission gate —
         which counts cached-idle pages it can evict first — makes that a
         bug, not a runtime condition)."""
+        if self.fault_hook is not None and self.fault_hook(n):
+            raise RuntimeError(
+                f"injected page allocation failure ({n} pages)")
         if n > len(self._free):
             raise RuntimeError(
                 f"page pool exhausted: requested {n} pages, "

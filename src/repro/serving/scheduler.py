@@ -105,6 +105,11 @@ class FIFOScheduler:
         self.feasibility: Callable[[Request], None] | None = None
         self._queue: deque[Request] = deque()
         self._seq = 0
+        # arrival seqs for crash-relaunched requests: deeply negative
+        # but increasing, so they sort BEFORE every fresh arrival of
+        # their class (they were already admitted once) while keeping
+        # their relative order
+        self._reinstate_seq = -(1 << 30)
         self.reset_stats()
 
     def reset_stats(self):
@@ -200,6 +205,34 @@ class FIFOScheduler:
         """Return admitted-but-not-started requests to the queue HEAD in
         their original order (the engine un-admits when a re-checked
         prefix match no longer fits after a concurrent eviction)."""
+        for r in reversed(reqs):
+            self._queue.appendleft(r)
+
+    def remove(self, uid: int) -> Request | None:
+        """Pull a still-queued request out (cancellation); None when
+        the uid is not queued (already admitted, or unknown)."""
+        for r in self._queue:
+            if r.uid == uid:
+                self._queue.remove(r)
+                return r
+        return None
+
+    def reinstate(self, reqs: list[Request]) -> None:
+        """Re-queue crash-relaunched requests AT THE HEAD, in order,
+        bypassing the submit-time feasibility gates: each was feasible
+        when first admitted and a relaunch prompt (original prompt +
+        emitted tokens) never exceeds the extent already proven to fit.
+        Stamps are fresh (``queued_at`` = now — the pre-crash timeline
+        died with the engine thread); the caller preserves absolute
+        deadlines across the relaunch when it wants them enforced."""
+        now = self.clock()
+        for r in reqs:
+            r.queued_at = now
+            if r.deadline_at is None and r.deadline_s is not None:
+                r.deadline_at = now + r.deadline_s
+            if r._seq < 0:
+                r._seq = self._reinstate_seq
+                self._reinstate_seq += 1
         for r in reversed(reqs):
             self._queue.appendleft(r)
 

@@ -56,27 +56,46 @@ def _run_slab(k_steps, max_len, eos_id, cache, state, park, step_fn):
     or runs out of cache (``frontier`` reaching ``max_len``); a dead
     lane's frontier/remaining freeze and its emitted tokens after the
     stop point are garbage the host discards — so greedy decode stays
-    bitwise-identical to the per-token path."""
+    bitwise-identical to the per-token path.
+
+    Fault containment rides the same carry: each step's last-row logits
+    pass a per-lane finite check, and a lane whose logits go NaN/Inf is
+    marked ``faulted`` and dies WITHOUT advancing its frontier — its
+    request fails structurally (engine quarantine) while every other
+    lane's argmax stream is untouched. ``state["poison"]`` (f32 (B,),
+    normally all zero) is the injection port: it is added to the first
+    in-slab step's logits and then zeroed, so a seeded FaultPlan can
+    corrupt exactly one lane at exactly one step — adding 0.0 to every
+    healthy lane's logits is exact in f32, so the check costs no
+    parity."""
     def body(carry, _):
-        cache, pending, frontier, remaining, live = carry
+        cache, pending, frontier, remaining, live, poison, faulted = carry
         write_pos = jnp.where(live, frontier, park)
         logits, cache = step_fn(cache, pending[:, None], write_pos)
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        frontier = jnp.where(live, frontier + 1, frontier)
-        remaining = jnp.where(live, remaining - 1, remaining)
-        died = (remaining <= 0) | (frontier >= max_len)
+        last = logits[:, -1] + poison[:, None]
+        poison = jnp.zeros_like(poison)
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        bad = live & ~jnp.isfinite(last).all(axis=-1)
+        faulted = faulted | bad
+        ok = live & ~bad
+        frontier = jnp.where(ok, frontier + 1, frontier)
+        remaining = jnp.where(ok, remaining - 1, remaining)
+        died = (remaining <= 0) | (frontier >= max_len) | bad
         if eos_id is not None:
             died |= nxt == eos_id
         live = live & ~died
         pending = jnp.where(live, nxt, pending)
-        return (cache, pending, frontier, remaining, live), nxt
+        return (cache, pending, frontier, remaining, live, poison,
+                faulted), nxt
 
     carry = (cache, state["pending"], state["frontier"],
-             state["remaining"], state["live"])
-    (cache, pending, frontier, remaining, live), toks = jax.lax.scan(
-        body, carry, None, length=k_steps)
+             state["remaining"], state["live"], state["poison"],
+             state["faulted"])
+    (cache, pending, frontier, remaining, live, poison,
+     faulted), toks = jax.lax.scan(body, carry, None, length=k_steps)
     state = dict(state, pending=pending, frontier=frontier,
-                 remaining=remaining, live=live)
+                 remaining=remaining, live=live, poison=poison,
+                 faulted=faulted)
     return toks.T, state, cache
 
 
@@ -186,19 +205,28 @@ def make_mixed_step(cfg, dist=None):
     ``start + q_len`` (the engine buckets it to a power of two); W is
     baked into the trace, so the engine buckets the width too.
 
+    ``poison`` (f32 (B,), normally zeros) is the same fault-injection
+    port as the slab's: added to each lane's last valid row before the
+    argmax, with a per-lane finite check returned as ``faulted`` so the
+    engine can quarantine a corrupted lane without touching the others
+    (idle lanes' garbage rows may be anything — the engine masks
+    ``faulted`` by lane activity before acting on it).
+
     mixed(params, cache, tokens (B,W), starts (B,), q_lens (B,),
-          offsets (B,), block_tables, read_pages)
-        -> (next_tokens (B,) int32, new_cache)
+          offsets (B,), block_tables, read_pages, poison (B,))
+        -> (next_tokens (B,) int32, faulted (B,) bool, new_cache)
     """
     def mixed_step(params, cache, tokens, starts, q_lens, offsets,
-                   block_tables, read_pages):
+                   block_tables, read_pages, poison):
         logits, cache = registry.paged_prefill_chunk(
             cfg, params, cache, tokens, starts, offsets, block_tables,
             read_pages=read_pages, masks=None, dist=dist, q_lens=q_lens)
         last = jnp.take_along_axis(
             logits, jnp.maximum(q_lens.astype(jnp.int32) - 1,
                                 0)[:, None, None], axis=1)[:, 0]
-        return jnp.argmax(last, -1).astype(jnp.int32), cache
+        last = last + poison[:, None]
+        faulted = ~jnp.isfinite(last).all(axis=-1)
+        return (jnp.argmax(last, -1).astype(jnp.int32), faulted, cache)
     return mixed_step
 
 

@@ -1,0 +1,320 @@
+"""Fault injection + graceful degradation (serving/faults.py): a
+poisoned lane fails ONLY its own request while every other lane stays
+bitwise-identical to the fault-free run, load shedding bounds the
+admission queue with a retry-after hint, offload records are
+capacity-gated and checksum-verified, SLA deadlines cancel mid-decode
+without perturbing the survivors, and reset_stats covers every new
+counter."""
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+
+from repro.models import registry
+from repro.serving.engine import Engine
+from repro.serving.faults import (BackpressureError, DeadlineExceededError,
+                                  FaultPlan, LaneFaultError,
+                                  OffloadCapacityError,
+                                  OffloadCorruptionError,
+                                  RequestCancelledError)
+from repro.serving.offload import HostKVStore
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = tiny_cfg()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, n).astype(np.int32)
+            for n in lens]
+
+
+def _drain(eng):
+    """Drive to completion; {uid: GenResult} (failed ones included)."""
+    out = {}
+    steps = 0
+    while (len(eng.scheduler) or eng.active_lanes or eng._preempted
+           or eng._pending_results):
+        for r in eng.step():
+            out[r.uid] = r
+        steps += 1
+        assert steps < 500
+    eng.finalize_stats()
+    return out
+
+
+def _pool_consistent(eng):
+    pool = eng.pool
+    return (pool.free_pages + pool.referenced + pool.cached_idle
+            == pool.n_pages)
+
+
+# ------------------------------------------------------- lane quarantine
+@pytest.mark.parametrize("mixed", [False, True])
+@pytest.mark.parametrize("kind", ["nan", "inf"])
+def test_poison_quarantines_only_its_lane(model, mixed, kind):
+    """Acceptance core: non-finite logits on one lane fail ONLY that
+    request (structured ``LaneFaultError``); every other request's
+    tokens are bitwise-identical to the fault-free run — including the
+    request admitted into the freed lane afterwards."""
+    cfg, params = model
+    prompts = _prompts(cfg, (7, 5, 9), seed=4)
+
+    def make(plan):
+        eng = Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
+                     page_size=4, mixed=mixed, faults=plan)
+        uids = [eng.submit(p, 12) for p in prompts]
+        return eng, uids
+
+    eng0, uids0 = make(None)
+    base = _drain(eng0)
+
+    # lanes 0/1 admit at step 0; poison lane 0's first decode of step 2
+    plan = FaultPlan(seed=0).poison_logits(2, 0, kind=kind)
+    eng1, uids1 = make(plan)
+    got = _drain(eng1)
+
+    bad = got[uids1[0]]
+    assert not bad.ok and isinstance(bad.error, LaneFaultError)
+    assert bad.error.uid == uids1[0] and bad.error.lane == 0
+    for u1, u0 in zip(uids1[1:], uids0[1:]):
+        assert got[u1].ok
+        assert got[u1].generated.tolist() == base[u0].generated.tolist()
+    assert eng1.stats["faults_injected"] == 1
+    assert eng1.stats["lanes_quarantined"] == 1
+    assert plan.fired == [f"poison:{kind}@2:lane0"]
+    # nothing leaked: the quarantined lane's pages all came back
+    assert _pool_consistent(eng1)
+    assert eng1.pool.referenced == 0
+
+
+def test_poisoned_lane_never_donates_to_prefix_cache(model):
+    """A quarantined lane's KV is untrusted: its pages free WITHOUT
+    parking in the radix tree, so a later identical prompt gets no
+    prefix hit from it."""
+    cfg, params = model
+    [p] = _prompts(cfg, (8,), seed=5)
+    eng = Engine(cfg, params, max_batch=1, max_len=48, slab_k=4,
+                 page_size=4, prefix_cache=True,
+                 faults=FaultPlan().poison_logits(1, 0))
+    u0 = eng.submit(p, 8)
+    got = _drain(eng)
+    assert isinstance(got[u0].error, LaneFaultError)
+    assert eng.pool.cached_idle == 0          # nothing donated
+    u1 = eng.submit(p, 8)                     # same prompt again
+    got = _drain(eng)
+    assert got[u1].ok
+    assert eng.stats["prefix_hits"] == 0
+
+
+def test_alloc_failure_is_an_engine_crash(model):
+    """An injected page-allocation failure raises out of ``step`` (the
+    watchdog's recovery domain, exercised in test_recovery.py) — the
+    engine does not half-admit."""
+    cfg, params = model
+    plan = FaultPlan().fail_alloc(0)
+    eng = Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
+                 page_size=4, faults=plan)
+    eng.submit(_prompts(cfg, (6,), seed=6)[0], 4)
+    with pytest.raises(RuntimeError, match="injected page allocation"):
+        eng.step()
+    assert "alloc_fail@0" in plan.fired
+
+
+# ----------------------------------------------------------- load shedding
+def test_load_shedding_bounds_queue_with_retry_after(model):
+    cfg, params = model
+    eng = Engine(cfg, params, max_batch=1, max_len=48, slab_k=4,
+                 page_size=4, admission_queue_limit=2)
+    ps = _prompts(cfg, (4, 4, 4, 4), seed=7)
+    eng.submit(ps[0], 2)
+    eng.submit(ps[1], 2)
+    for p in ps[2:]:
+        with pytest.raises(BackpressureError) as ei:
+            eng.submit(p, 2)
+        assert ei.value.queue_depth == 2 and ei.value.limit == 2
+        assert 0.05 <= ei.value.retry_after_s <= 60.0
+    assert len(eng.scheduler) == 2            # the bound held
+    assert eng.stats["shed_requests"] == 2
+    got = _drain(eng)                          # admitted work unharmed
+    assert all(r.ok for r in got.values()) and len(got) == 2
+    # queue drained -> capacity again: the retry eventually succeeds
+    eng.submit(ps[2], 2)
+    assert all(r.ok for r in _drain(eng).values())
+
+
+# ------------------------------------------------------ offload store gates
+def test_offload_capacity_gate():
+    store = HostKVStore(capacity_bytes=1000)
+    k = np.zeros((1, 2, 4, 1, 8), np.float32)       # 256B, x2 = 512B
+    store.save(1, [0, 1], k, np.ones_like(k))
+    with pytest.raises(OffloadCapacityError) as ei:
+        store.save(2, [0, 1], k, np.ones_like(k))   # 1024 > 1000
+    assert ei.value.used == 512 and ei.value.capacity == 1000
+    assert 2 not in store and len(store) == 1       # nothing half-saved
+    store.pop(1)
+    store.save(2, [0, 1], k, np.ones_like(k))       # fits after the pop
+
+
+def test_offload_checksum_catches_bit_flip():
+    store = HostKVStore()
+    plan = FaultPlan().corrupt_offload(nth_save=0, bit=3)
+    store.fault_hook = plan.on_offload_save
+    k = np.arange(64, dtype=np.float32).reshape(1, 2, 4, 1, 8)
+    store.save(9, [0, 1], k, np.ones_like(k))
+    with pytest.raises(OffloadCorruptionError) as ei:
+        store.pop(9)
+    assert ei.value.uid == 9 and ei.value.logical == [0]
+    assert 9 not in store        # the poisoned record is gone for good
+    # an uncorrupted record still round-trips
+    store.save(10, [0, 1], k, np.ones_like(k))
+    rec = store.pop(10)
+    np.testing.assert_array_equal(rec.k, k)
+
+
+def test_preempt_restore_catches_corrupted_page(model):
+    """A preempted lane whose offloaded KV is corrupted in host RAM
+    fails structurally at restore — and ONLY that request; the other
+    lane's tokens stay bitwise-identical to the fault-free run."""
+    cfg, params = model
+    prompts = _prompts(cfg, (7, 5), seed=8)
+
+    def run(plan):
+        eng = Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
+                     page_size=4, faults=plan)
+        uids = [eng.submit(p, 12) for p in prompts]
+        preempted = False
+        out, steps = {}, 0
+        while (len(eng.scheduler) or eng.active_lanes or eng._preempted
+               or eng._pending_results):
+            for r in eng.step():
+                out[r.uid] = r
+            if not preempted:
+                live = [i for i in eng.active_lanes
+                        if eng._mirror["live"][i]
+                        and i not in eng._prefilling
+                        and eng.lanes[i].req.uid == uids[0]]
+                if live:
+                    eng.preempt(live[0])
+                    preempted = True
+            steps += 1
+            assert steps < 500
+        eng.finalize_stats()
+        return eng, uids, out
+
+    _, uids0, base = run(None)
+    plan = FaultPlan().corrupt_offload(nth_save=0)
+    eng, uids, got = run(plan)
+    assert "bitflip:save0" in plan.fired
+    bad = got[uids[0]]
+    assert isinstance(bad.error, LaneFaultError)
+    assert "checksum" in bad.error.reason
+    assert got[uids[1]].generated.tolist() == \
+        base[uids0[1]].generated.tolist()
+    assert eng.stats["lanes_quarantined"] == 1
+    assert eng.stats["faults_injected"] == 1
+    assert _pool_consistent(eng) and eng.pool.referenced == 0
+    assert len(eng._offload) == 0
+
+
+# -------------------------------------------------- deadline mid-decode
+def test_deadline_expiry_cancels_mid_decode(model):
+    """Satellite: a request whose SLA deadline passes mid-decode is
+    cancelled at the next host sync (``DeadlineExceededError``), its
+    lane and pages free, and the surviving lanes' tokens are
+    bitwise-unchanged."""
+    cfg, params = model
+    prompts = _prompts(cfg, (7, 5), seed=9)
+
+    def run(enforce, deadline):
+        eng = Engine(cfg, params, max_batch=2, max_len=64, slab_k=4,
+                     page_size=4, enforce_deadlines=enforce)
+        u0 = eng.submit(prompts[0], 24, deadline_s=deadline)
+        u1 = eng.submit(prompts[1], 24)
+        return eng, (u0, u1), _drain(eng)
+
+    _, (b0, b1), base = run(False, None)
+    # an already-expired deadline: the cancel lands at the FIRST sync
+    # after admission — mid-slab, tokens already decoded on-device
+    eng, (u0, u1), got = run(True, 1e-6)
+    assert isinstance(got[u0].error, DeadlineExceededError)
+    assert isinstance(got[u0].error, RequestCancelledError)  # taxonomy
+    assert len(got[u0].generated) < 24        # cancelled mid-decode
+    assert got[u1].ok
+    assert got[u1].generated.tolist() == base[b1].generated.tolist()
+    assert eng.stats["deadline_cancelled"] == 1
+    assert eng.stats["cancelled"] == 1
+    assert _pool_consistent(eng) and eng.pool.referenced == 0
+    # without enforcement the deadline is observability-only
+    assert base[b0].ok and len(base[b0].generated) == 24
+
+
+# -------------------------------------------------------------- cancel
+def test_cancel_everywhere_and_idempotent(model):
+    """``Engine.cancel`` reaches a request queued, decoding, or frozen
+    preempted; frees everything; returns False the second time."""
+    cfg, params = model
+    prompts = _prompts(cfg, (6, 5, 4), seed=10)
+    eng = Engine(cfg, params, max_batch=1, max_len=48, slab_k=4,
+                 page_size=4)
+    u0, u1, u2 = (eng.submit(p, 10) for p in prompts)
+    got = {}
+
+    def take(results):
+        got.update((r.uid, r) for r in results)
+
+    assert eng.cancel(u2)                     # still queued
+    assert not eng.cancel(u2)                 # idempotent
+    take(eng.step())                          # u0 decoding on lane 0
+    [i] = eng.active_lanes
+    eng.preempt(i)                            # u0 frozen in host RAM
+    assert eng.cancel(u0)                     # preempted
+    assert len(eng._offload) == 0             # record dropped
+    take(eng.step())                          # u1 takes the lane
+    assert eng.cancel(u1)                     # active
+    got.update(_drain(eng).items())
+    assert all(isinstance(r.error, RequestCancelledError)
+               for r in got.values()) and len(got) == 3
+    assert eng.stats["cancelled"] == 3
+    assert _pool_consistent(eng) and eng.pool.referenced == 0
+    assert not eng.cancel(u1)                 # already finished
+
+
+# --------------------------------------------------- stats coverage
+def test_reset_stats_covers_fault_counters(model):
+    """Regression (mirrors the PR 5 observability test): every fault /
+    recovery / shedding counter exists, moves under real activity, and
+    is cleared by reset_stats."""
+    cfg, params = model
+    new_keys = ("faults_injected", "lanes_quarantined", "recoveries",
+                "recovered_zero_reprefill", "re_prefilled_tokens",
+                "shed_requests", "cancelled", "deadline_cancelled",
+                "watchdog_hangs", "engine_crashes")
+    eng = Engine(cfg, params, max_batch=1, max_len=48, slab_k=4,
+                 page_size=4, admission_queue_limit=1,
+                 faults=FaultPlan().poison_logits(1, 0))
+    for k in new_keys:
+        assert k in eng.stats, k
+    ps = _prompts(cfg, (5, 4, 4), seed=11)
+    eng.submit(ps[0], 8)
+    with pytest.raises(BackpressureError):
+        eng.submit(ps[1], 2)
+        eng.submit(ps[2], 2)
+    _drain(eng)
+    assert eng.stats["faults_injected"] == 1
+    assert eng.stats["lanes_quarantined"] == 1
+    assert eng.stats["shed_requests"] == 1
+    # the counters real activity can't cheaply reach here are covered
+    # by writing them directly — reset must clear ALL of them
+    for k in new_keys:
+        eng.stats[k] = eng.stats[k] or 3
+    eng.reset_stats()
+    for k in new_keys:
+        assert eng.stats[k] == 0, k
+    eng.finalize_stats()
+    assert eng.stats["offload_capacity_bytes"] == 0    # unbounded
