@@ -1,8 +1,20 @@
 """Paper Table 2 / Fig. 8 — pretraining: end-to-end time + perplexity,
-BLaST vs dense, on the synthetic corpus (OpenWebText stand-in)."""
+BLaST vs dense, on the synthetic corpus (OpenWebText stand-in).
+
+``--chaos-only`` runs the training chaos scenarios instead (ISSUE 8):
+SIGKILL-and-resume recovery latency + bitwise parity, NaN-skip parity,
+and corrupt-checkpoint fallback — results land in a JSON artifact
+(``--out``, default BENCH_train_chaos.json) BEFORE any assertion, so a
+failed oracle still leaves the measurements on disk for CI.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import math
+import os
+import signal
+import tempfile
 import time
 
 import numpy as np
@@ -11,6 +23,7 @@ from benchmarks.common import bench_cfg, replace_blast, row
 from repro.data.pipeline import SyntheticLM
 from repro.optim import adamw
 from repro.training import train_loop
+from repro.training import faults as tf
 
 
 def run(cfg, steps=60, seed=3):
@@ -19,10 +32,10 @@ def run(cfg, steps=60, seed=3):
     opt = adamw.AdamWConfig(peak_lr=3e-3, warmup_steps=5,
                             total_steps=steps, weight_decay=0.01)
     loop = train_loop.TrainLoopConfig(total_steps=steps, log_every=steps)
-    t0 = time.time()
+    t0 = time.monotonic()
     state, hist = train_loop.train(cfg, opt, src, loop,
                                    log_fn=lambda m: None)
-    wall = time.time() - t0
+    wall = time.monotonic() - t0
     # eval perplexity on held-out batches
     import jax, jax.numpy as jnp
     from repro.core.distill import cross_entropy
@@ -54,5 +67,142 @@ def main():
             f"ppl={ppl:.2f} sparsity={sp:.2f}")
 
 
+# ------------------------------------------------------- chaos scenarios
+def _chaos_cfg():
+    from repro.configs.base import ModelConfig
+    from repro.core.prune_grow import BlastSpec
+    spec = tf.default_chaos_spec(".")
+    return ModelConfig(**spec["model"], blast=BlastSpec(**spec["blast"]))
+
+
+def _chaos_train(cfg, steps, faults=None, **loop_kw):
+    src = SyntheticLM(cfg.vocab_size, seq_len=32, global_batch=8, seed=3)
+    opt = adamw.AdamWConfig(peak_lr=2e-2, warmup_steps=5, total_steps=60,
+                            weight_decay=0.0)
+    loop = train_loop.TrainLoopConfig(total_steps=steps,
+                                      log_every=10 ** 9, **loop_kw)
+    return train_loop.train(cfg, opt, src, loop, faults=faults,
+                            log_fn=lambda m: None)
+
+
+def _leaves(state):
+    import jax
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(
+        {"step": state.step, "params": state.params,
+         "opt_state": state.opt_state, "masks": state.masks,
+         "rng": state.rng})]
+
+
+def _bitwise(a_leaves, b_leaves):
+    return all(np.array_equal(a, b)
+               for a, b in zip(a_leaves, b_leaves))
+
+
+def _scenario_sigkill(wd):
+    """Kill a subprocess run at step 11 (newest ckpt: step 8), resume,
+    compare bitwise with an uninterrupted run; measure recovery."""
+    ck = os.path.join(wd, "ck")
+    spec_a = tf.default_chaos_spec(wd, ckpt_dir=ck, kill_at=11)
+    ra = tf.run_child(spec_a, os.path.join(wd, "a.json"))
+    spec_a2 = tf.default_chaos_spec(wd, ckpt_dir=ck)
+    ra2 = tf.run_child(spec_a2, os.path.join(wd, "a2.json"))
+    spec_b = tf.default_chaos_spec(
+        wd, out=os.path.join(wd, "final_b.npz"),
+        meta_out=os.path.join(wd, "meta_b.json"))
+    rb = tf.run_child(spec_b, os.path.join(wd, "b.json"))
+    meta = {}
+    if ra2.returncode == 0:
+        with open(spec_a2["meta_out"]) as f:
+            meta = json.load(f)
+    bitwise = False
+    if ra2.returncode == 0 and rb.returncode == 0:
+        with np.load(spec_a2["out"]) as za, np.load(spec_b["out"]) as zb:
+            bitwise = (set(za.files) == set(zb.files)
+                       and all(np.array_equal(za[k], zb[k])
+                               for k in za.files))
+    resumed = meta.get("resumed_from")
+    return {
+        "scenario": "sigkill_resume",
+        "killed": ra.returncode == -signal.SIGKILL,
+        "kill_at": spec_a["kill_at"],
+        "resumed_from": resumed,
+        "steps_lost": (spec_a["kill_at"] - resumed
+                       if resumed is not None else None),
+        "recovery_wall_s": meta.get("wall_s"),
+        "verify_latency_s": meta.get("verify_latency_s"),
+        "bitwise_identical": bitwise,
+    }
+
+
+def _scenario_nan_skip():
+    """NaN grads at two steps under skip policy vs never applying those
+    updates: final TrainStates must match bitwise."""
+    cfg = _chaos_cfg()
+    plan_a = tf.TrainFaultPlan().nan_grads(5).nan_grads(9)
+    t0 = time.monotonic()
+    state_a, hist_a = _chaos_train(cfg, 16, faults=plan_a)
+    wall = time.monotonic() - t0
+    plan_b = tf.TrainFaultPlan().force_skip(5).force_skip(9)
+    state_b, _ = _chaos_train(cfg, 16, faults=plan_b)
+    m = [h for h in hist_a if "event" not in h][-1]
+    return {
+        "scenario": "nan_skip_parity",
+        "injected": 2,
+        "skipped_steps": m["skipped_steps"],
+        "wall_s": wall,
+        "bitwise_identical": _bitwise(_leaves(state_a),
+                                      _leaves(state_b)),
+    }
+
+
+def _scenario_corrupt_fallback(wd):
+    """The fault plan bit-flips the newest checkpoint after it lands;
+    resume must fall back to the previous intact one and still converge
+    to the clean run bitwise."""
+    cfg = _chaos_cfg()
+    d = os.path.join(wd, "ck")
+    plan = tf.TrainFaultPlan().corrupt_checkpoint(2)   # step-12 save
+    _chaos_train(cfg, 12, faults=plan, ckpt_dir=d, ckpt_every=4)
+    t0 = time.monotonic()
+    state_a, hist = _chaos_train(cfg, 20, ckpt_dir=d, ckpt_every=4)
+    wall = time.monotonic() - t0
+    state_c, _ = _chaos_train(cfg, 20)
+    m = [h for h in hist if "event" not in h][-1]
+    return {
+        "scenario": "corrupt_ckpt_fallback",
+        "corrupted_saves": len(plan.fired),
+        "ckpt_fallbacks": m["ckpt_fallbacks"],
+        "resume_wall_s": wall,
+        "bitwise_identical": _bitwise(_leaves(state_a),
+                                      _leaves(state_c)),
+    }
+
+
+def chaos_main(out: str):
+    rows = []
+    with tempfile.TemporaryDirectory() as wd:
+        rows.append(_scenario_sigkill(wd))
+    rows.append(_scenario_nan_skip())
+    with tempfile.TemporaryDirectory() as wd:
+        rows.append(_scenario_corrupt_fallback(wd))
+    with open(out, "w") as f:           # artifact BEFORE any assert
+        json.dump({"bench": "train_chaos", "rows": rows}, f, indent=2)
+    for r in rows:
+        row(f"chaos_{r['scenario']}", 0.0,
+            f"bitwise={r['bitwise_identical']}")
+    assert all(r["bitwise_identical"] for r in rows), rows
+    assert rows[0]["killed"] and rows[0]["resumed_from"] == 8
+    assert rows[1]["skipped_steps"] == 2
+    assert rows[2]["ckpt_fallbacks"] >= 1
+    print(f"chaos scenarios OK -> {out}")
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--chaos-only", action="store_true")
+    ap.add_argument("--out", default="BENCH_train_chaos.json")
+    args = ap.parse_args()
+    if args.chaos_only:
+        chaos_main(args.out)
+    else:
+        main()

@@ -1,15 +1,29 @@
 """Fault-tolerant checkpointing (no orbax in the container; pure
 numpy + atomic renames).
 
-Properties required at 1000-node scale (DESIGN.md §4):
+Properties required at 1000-node scale (DESIGN.md §4, hardened per
+ISSUE 8):
   * checkpoints are stored LOGICALLY (full arrays, path-keyed npz), not
     per-device — restore can reshard onto ANY mesh (elastic restart
     after losing a pod);
-  * atomic: write to <dir>.tmp then os.replace; a crash mid-write never
-    corrupts the latest checkpoint;
+  * atomic AND non-destructive: write to <dir>.tmp, park any existing
+    <dir> at <dir>.old, rename the tmp into place, then drop the .old —
+    there is no instant at which the previous intact checkpoint has
+    been deleted but its replacement is not yet in place (the old
+    rmtree-then-replace scheme had exactly that crash window).
+    Leftovers from a killed writer are recovered on the next start: a
+    parked .old whose final rename never happened is promoted back, a
+    stale .tmp is dropped, and ``steps()`` never lists either;
+  * INTEGRITY: every array is crc32'd into a manifest in meta.json and
+    verified on restore; ``restore(step=None)`` falls back to the
+    newest INTACT checkpoint (counting ``fallbacks``), and keep-k GC
+    never deletes the newest intact checkpoint even when newer corrupt
+    ones exist;
   * async: the array->host gather runs in the caller, the file write in
-    a background thread (training continues);
-  * keep-k retention + 'latest' discovery for auto-resume;
+    a background thread (training continues); a write failure is
+    captured and re-raised on ``wait()`` / the next ``save()`` instead
+    of dying silently in the daemon thread;
+  * keep-k retention + latest-intact discovery for auto-resume;
   * the data-iterator state (step) and RNG are inside the state, so
     restart replays the exact batch sequence.
 """
@@ -19,9 +33,12 @@ import json
 import os
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
+
+from repro.training.faults import CheckpointCorruptionError
 
 
 def _flatten(tree, prefix=""):
@@ -48,17 +65,43 @@ def _unflatten_into(template, flat):
     return rec(template, "")
 
 
+def _crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
         self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+        self.fallbacks = 0         # corrupt/torn ckpts skipped on restore
+        self.fault_hook = None     # training/faults.py corruption port
         os.makedirs(directory, exist_ok=True)
+        self._recover_leftovers()
+
+    def _recover_leftovers(self):
+        """Crash cleanup: a parked ``.old`` whose final rename never
+        happened is the non-destructive swap's crash window — promote
+        it back into place (it was intact when parked). Stale ``.tmp``
+        dirs from a killed writer are dropped."""
+        for name in sorted(os.listdir(self.dir)):
+            p = os.path.join(self.dir, name)
+            if name.endswith(".old"):
+                final = p[: -len(".old")]
+                if os.path.exists(final):
+                    shutil.rmtree(p, ignore_errors=True)
+                else:
+                    os.replace(p, final)
+            elif name.endswith(".tmp"):
+                shutil.rmtree(p, ignore_errors=True)
 
     # ----------------------------------------------------------- save
     def save(self, step: int, state, blocking: bool = False,
              extra: dict | None = None):
-        """Gather to host synchronously, write asynchronously."""
+        """Gather to host synchronously, write asynchronously. Raises a
+        previous async write's captured exception (if any) HERE, before
+        gathering for the new save."""
         from repro.training.step import TrainState
         tree = {"step": state.step, "params": state.params,
                 "opt_state": state.opt_state, "masks": state.masks,
@@ -71,53 +114,111 @@ class Checkpointer:
         def write():
             tmp = os.path.join(self.dir, f"step_{step:08d}.tmp")
             final = os.path.join(self.dir, f"step_{step:08d}")
-            os.makedirs(tmp, exist_ok=True)
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
             np.savez(os.path.join(tmp, "arrays.npz"), **host)
-            meta = {"step": int(step), **(extra or {})}
+            meta = {"step": int(step),
+                    "checksums": {k: _crc(v) for k, v in host.items()},
+                    **(extra or {})}
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
             if os.path.exists(final):
-                shutil.rmtree(final)
-            os.replace(tmp, final)
+                # non-destructive swap: park, rename in, then drop —
+                # never a window with no complete checkpoint on disk
+                old = final + ".old"
+                if os.path.exists(old):
+                    shutil.rmtree(old)
+                os.replace(final, old)
+                os.replace(tmp, final)
+                shutil.rmtree(old, ignore_errors=True)
+            else:
+                os.replace(tmp, final)
+            if self.fault_hook is not None:
+                self.fault_hook(final, step)
             self._gc()
 
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def runner():
+                try:
+                    write()
+                except BaseException as e:   # surfaced on wait()/save()
+                    self._error = e
+            self._thread = threading.Thread(target=runner, daemon=True)
             self._thread.start()
 
     def wait(self):
+        """Join any in-flight write and re-raise its exception."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
     def _gc(self):
-        steps = sorted(self.steps())
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+        """Keep-k retention that NEVER deletes the newest intact
+        checkpoint: when newer checkpoints are corrupt, the newest one
+        that verifies is protected even if it falls outside keep-k."""
+        steps = self.steps()
+        if len(steps) <= self.keep:
+            return
+        protect = set(steps[-self.keep:])
+        for s in reversed(steps):
+            if self.verify(s):
+                protect.add(s)
+                break
+        for s in steps:
+            if s not in protect:
+                shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                              ignore_errors=True)
 
     # -------------------------------------------------------- restore
     def steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
-            if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name.split("_")[1]))
+            if (name.startswith("step_") and not name.endswith(".tmp")
+                    and not name.endswith(".old")):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
         return sorted(out)
 
     def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, template, step: int | None = None,
-                shardings=None):
-        """Restore into the structure of ``template``. With
-        ``shardings`` (same tree structure), arrays are placed sharded —
-        onto WHATEVER mesh the shardings reference (elastic reshard)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+    def verify(self, step: int) -> bool:
+        """Full integrity check: meta.json parses, the array set
+        matches the manifest, and every array's crc32 matches. Legacy
+        checkpoints without a manifest pass on a load test alone."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "meta.json")) as f:
+                meta = json.load(f)
+            cks = meta.get("checksums")
+            with np.load(os.path.join(d, "arrays.npz")) as z:
+                names = list(z.files)
+                if cks is None:
+                    for k in names:
+                        z[k]
+                    return True
+                if set(names) != set(cks):
+                    return False
+                return all(_crc(z[k]) == cks[k] for k in names)
+        except Exception:
+            return False
+
+    def latest_intact_step(self) -> int | None:
+        for s in reversed(self.steps()):
+            if self.verify(s):
+                return s
+        return None
+
+    def _load(self, template, step: int, shardings):
         path = os.path.join(self.dir, f"step_{step:08d}", "arrays.npz")
         with np.load(path) as z:
             flat = {k: z[k] for k in z.files}
@@ -126,6 +227,31 @@ class Checkpointer:
             tree = jax.tree_util.tree_map(
                 lambda x, s: jax.device_put(x, s), tree, shardings)
         return tree
+
+    def restore(self, template, step: int | None = None,
+                shardings=None):
+        """Restore into the structure of ``template``. With
+        ``shardings`` (same tree structure), arrays are placed sharded —
+        onto WHATEVER mesh the shardings reference (elastic reshard).
+
+        An explicit ``step`` is verified and raises
+        ``CheckpointCorruptionError`` on a mismatch. With ``step=None``
+        the newest INTACT checkpoint is restored — corrupt or torn
+        newer ones are skipped automatically (counted in
+        ``fallbacks``)."""
+        if step is not None:
+            if not self.verify(step):
+                raise CheckpointCorruptionError(step, self.dir)
+            return self._load(template, step, shardings)
+        steps = self.steps()
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        for skipped, s in enumerate(reversed(steps)):
+            if self.verify(s):
+                self.fallbacks += skipped
+                return self._load(template, s, shardings)
+        raise CheckpointCorruptionError(
+            steps[-1], self.dir, "no intact checkpoint to fall back to")
 
     def restore_state(self, template_state, step: int | None = None,
                       shardings=None):

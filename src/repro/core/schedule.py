@@ -30,3 +30,19 @@ def keep_count(sparsity, n_blocks: int, minimum: int = 1):
     """
     kept = jnp.ceil((1.0 - sparsity) * n_blocks).astype(jnp.int32)
     return jnp.clip(kept, minimum, n_blocks)
+
+
+def is_refresh_step(step, step_size: int) -> bool:
+    """True when the prune-grow mask refresh fires at ``step`` — the
+    cadence of ``sparse_mlp.maybe_refresh`` (host-side helper for
+    schedule-aware consumers like the training anomaly guard)."""
+    return step_size > 0 and int(step) % int(step_size) == 0
+
+
+def steps_since_refresh(step, step_size: int) -> int:
+    """Steps elapsed since the most recent scheduled mask refresh at or
+    before ``step`` (0 on a refresh step itself). With no refresh
+    cadence (``step_size <= 0``) returns ``step``."""
+    if step_size <= 0:
+        return int(step)
+    return int(step) % int(step_size)

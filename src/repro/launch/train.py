@@ -26,6 +26,9 @@ def main():
     ap.add_argument("--s-max", type=float, default=None)
     ap.add_argument("--step-size", type=int, default=None)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--no-guard", action="store_true",
+                    help="disable the anomaly guard (device-side skip "
+                         "+ host-side spike/rewind policy)")
     ap.add_argument("--data", default=None, help="memmap token file")
     ap.add_argument("--mesh", choices=["none", "single", "multi"],
                     default="none")
@@ -70,7 +73,8 @@ def main():
                             warmup_steps=max(args.steps // 20, 5))
     loop = train_loop.TrainLoopConfig(
         total_steps=args.steps, ckpt_dir=args.ckpt_dir,
-        ckpt_every=max(args.steps // 5, 10))
+        ckpt_every=max(args.steps // 5, 10),
+        guard=None if args.no_guard else train_loop.GuardConfig())
     state, history = train_loop.train(cfg, opt, source, loop, dist=dist)
     print(f"done: final loss {history[-1]['loss']:.4f}, "
           f"sparsity {history[-1]['sparsity']:.3f}")

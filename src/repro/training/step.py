@@ -74,7 +74,9 @@ def loss_fn(cfg, params, masks, batch, teacher_logits=None,
 
 def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, dist=None,
                     kd_alpha=1.0, kd_beta=0.0, teacher_cfg=None,
-                    teacher_params_static=None, microbatches: int = 1):
+                    teacher_params_static=None, microbatches: int = 1,
+                    guard: bool = True,
+                    grad_norm_limit: float | None = None):
     """Build the jittable train_step(state, batch) -> (state, metrics).
 
     ``microbatches`` > 1: gradient accumulation via lax.scan over batch
@@ -84,11 +86,32 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, dist=None,
     Knowledge distillation (paper §5.2): when ``teacher_cfg`` is given,
     the batch must carry 'teacher_logits' (precomputed) OR
     ``teacher_params_static`` is closed over for an in-step dense
-    teacher forward."""
+    teacher forward.
+
+    Anomaly guard (``guard=True``): the step computes an ``anomaly``
+    flag — non-finite loss, non-finite gradient norm, or gradient norm
+    over ``grad_norm_limit`` — and applies SKIP-UPDATE semantics under
+    ``lax.cond``: an anomalous step is an identity update on
+    params/opt-state/masks (only ``step`` advances), so a run that
+    hits NaN grads at step k is bitwise-identical to a run that never
+    applies step k's update. The flag rides the metrics dict: zero
+    extra host syncs.
+
+    Fault-injection scalars (training/faults.py) may ride the batch:
+    ``grad_poison`` multiplies the loss by ``(1 + poison)`` BEFORE the
+    backward (NaN/Inf poisons every gradient; the 0.0 no-fault value is
+    a bitwise-exact identity), ``loss_poison`` is added to the REPORTED
+    loss only (host-visible spike, gradients untouched), and
+    ``force_skip`` forces the skip path with healthy gradients (the
+    parity oracle's control arm)."""
     spec = cfg.blast
     dense_flags = registry.dense_layer_flags(cfg) if spec.enabled else None
 
     def train_step(state: TrainState, batch):
+        batch = dict(batch)
+        grad_poison = batch.pop("grad_poison", None)
+        loss_poison = batch.pop("loss_poison", None)
+        force_skip = batch.pop("force_skip", None)
         teacher_logits = batch.get("teacher_logits")
         if teacher_params_static is not None:
             teacher_logits, _ = registry.forward(
@@ -97,10 +120,14 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, dist=None,
             teacher_logits = jax.lax.stop_gradient(teacher_logits)
 
         def grads_of(b, tl):
+            def poisoned_loss(p):
+                loss, aux2 = loss_fn(cfg, p, state.masks, b, tl,
+                                     kd_alpha, kd_beta, dist)
+                if grad_poison is not None:
+                    loss = loss * (1.0 + grad_poison)
+                return loss, aux2
             return jax.value_and_grad(
-                lambda p: loss_fn(cfg, p, state.masks, b,
-                                  tl, kd_alpha, kd_beta, dist),
-                has_aux=True)(state.params)
+                poisoned_loss, has_aux=True)(state.params)
 
         if microbatches <= 1:
             (loss, (_, aux)), dense_grads = grads_of(batch,
@@ -130,22 +157,45 @@ def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, dist=None,
                 lambda g: g / n, dense_grads)
             loss, aux = loss / n, aux / n
 
-        if spec.enabled:
-            masks, params, grown = sm.maybe_refresh(
-                spec, state.params, dense_grads, state.masks,
-                state.step, dense_flags)
-            grads = sm.mask_grads(masks, dense_grads, spec)
-            opt_state = adamw.mask_moments(state.opt_state, masks, spec)
+        gnorm = adamw.global_norm(dense_grads)
+        if guard:
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
+            if grad_norm_limit is not None:
+                ok &= gnorm <= grad_norm_limit
+            anomaly = ~ok
         else:
-            masks, params, grads = state.masks, state.params, dense_grads
-            opt_state = state.opt_state
+            anomaly = jnp.zeros((), bool)
+        if force_skip is not None:
+            anomaly = anomaly | (force_skip > 0)
 
-        params, opt_state, om = adamw.update(
-            opt_cfg, grads, opt_state, params, state.step)
-        metrics = {"loss": loss, "aux": aux,
+        def apply_update(_):
+            if spec.enabled:
+                masks, params, _grown = sm.maybe_refresh(
+                    spec, state.params, dense_grads, state.masks,
+                    state.step, dense_flags)
+                grads = sm.mask_grads(masks, dense_grads, spec)
+                opt_state = adamw.mask_moments(state.opt_state, masks,
+                                               spec)
+            else:
+                masks, params = state.masks, state.params
+                grads, opt_state = dense_grads, state.opt_state
+            params, opt_state, _om = adamw.update(
+                opt_cfg, grads, opt_state, params, state.step)
+            return params, opt_state, masks
+
+        def skip_update(_):
+            return state.params, state.opt_state, state.masks
+
+        params, opt_state, masks = jax.lax.cond(
+            anomaly, skip_update, apply_update, None)
+
+        loss_out = loss if loss_poison is None else loss + loss_poison
+        metrics = {"loss": loss_out, "aux": aux,
                    "sparsity": (sm.tree_sparsity(masks)
                                 if spec.enabled else 0.0),
-                   **om}
+                   "grad_norm": gnorm,
+                   "lr": adamw.lr_at(opt_cfg, state.step),
+                   "anomaly": anomaly.astype(jnp.int32)}
         new_state = TrainState(step=state.step + 1, params=params,
                                opt_state=opt_state, masks=masks,
                                rng=state.rng)

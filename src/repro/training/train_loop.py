@@ -1,20 +1,35 @@
 """Training loop: pjit'd step + BLaST pruning (inside the step) +
-checkpoint/restart + preemption handling + straggler watchdog.
+anomaly guard + checkpoint/restart + automatic rewind + preemption
+handling + straggler watchdog.
 
-Fault tolerance model (DESIGN.md §4):
-  * auto-resume from the latest checkpoint in ``ckpt_dir`` at startup;
-  * periodic async checkpoints (keep-k, atomic);
+Fault tolerance model (DESIGN.md §4, hardened per ISSUE 8):
+  * auto-resume from the latest INTACT checkpoint in ``ckpt_dir`` at
+    startup (torn/corrupt checkpoints are skipped via the crc32
+    manifest);
+  * periodic async checkpoints (keep-k, atomic, non-destructive swap);
+    a failed background write surfaces on ``wait()``/the next save;
+  * every jitted step carries an all-finite + grad-norm check and
+    SKIPS anomalous updates on device (``training/step.py``); the host
+    runs EMA/z-score loss-spike detection (``training/guard.py``),
+    schedule-aware around prune-grow refreshes;
+  * K consecutive anomalies trigger an automatic REWIND: restore the
+    newest intact checkpoint and replay — bitwise-exact because the
+    data pipeline is stateless (batch = f(seed, step)) and the RNG
+    lives in the TrainState. A spent rewind budget raises
+    ``TrainingDivergedError``;
   * SIGTERM/SIGINT triggers one final blocking checkpoint, then a clean
     exit — a preempted worker loses at most the in-flight step;
-  * the data pipeline is stateless-resumable (batch = f(seed, step));
-  * a wall-time watchdog logs steps slower than ``straggler_factor`` x
-    the running median (on real multi-pod deployments this feeds the
-    controller that re-shards around slow hosts; here it logs).
+  * a wall-time watchdog emits structured straggler events (step,
+    duration, running median) through the same log_fn/history channel
+    as metrics, plus a ``straggler_steps`` counter (on real multi-pod
+    deployments this feeds the controller that re-shards around slow
+    hosts).
 """
 from __future__ import annotations
 
 import dataclasses
 import signal
+import sys
 import time
 from typing import Any, Callable
 
@@ -24,6 +39,8 @@ import numpy as np
 from repro.checkpointing.checkpoint import Checkpointer
 from repro.optim import adamw
 from repro.training import step as step_mod
+from repro.training.faults import TrainingDivergedError
+from repro.training.guard import AnomalyGuard, GuardConfig
 
 
 @dataclasses.dataclass
@@ -34,16 +51,28 @@ class TrainLoopConfig:
     log_every: int = 10
     keep: int = 3
     straggler_factor: float = 3.0
+    guard: GuardConfig | None = dataclasses.field(
+        default_factory=GuardConfig)
 
 
 def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
           dist=None, state=None, jit_kwargs: dict | None = None,
           log_fn: Callable[[dict], None] | None = None,
-          teacher_params=None, teacher_cfg=None, kd_beta: float = 0.0):
-    """Returns (final_state, history list of metric dicts)."""
+          teacher_params=None, teacher_cfg=None, kd_beta: float = 0.0,
+          faults=None):
+    """Returns (final_state, history list of metric dicts).
+
+    ``faults`` is an optional ``training/faults.py`` TrainFaultPlan —
+    the chaos-test injection port. History entries are either step
+    metrics (every ``log_every`` steps and the final step — the LAST
+    entry is always the final step's metrics) or structured events
+    (``{"event": "straggler" | "rewind" | ...}``)."""
+    gcfg = loop.guard if (loop.guard and loop.guard.enabled) else None
     train_step = step_mod.make_train_step(
         cfg, opt_cfg, dist=dist, kd_beta=kd_beta,
-        teacher_cfg=teacher_cfg, teacher_params_static=teacher_params)
+        teacher_cfg=teacher_cfg, teacher_params_static=teacher_params,
+        guard=gcfg is not None,
+        grad_norm_limit=gcfg.grad_norm_limit if gcfg else None)
     step_fn = jax.jit(train_step, donate_argnums=(0,),
                       **(jit_kwargs or {}))
 
@@ -52,11 +81,20 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
 
     ckpt = Checkpointer(loop.ckpt_dir, keep=loop.keep) \
         if loop.ckpt_dir else None
+    if ckpt is not None and faults is not None:
+        ckpt.fault_hook = faults.on_ckpt_saved
     start = 0
-    if ckpt and ckpt.latest_step() is not None:
+    if ckpt and ckpt.latest_intact_step() is not None:
         state = ckpt.restore_state(state)
         start = int(np.asarray(state.step))
         print(f"[resume] restored step {start} from {loop.ckpt_dir}")
+
+    guard = AnomalyGuard(
+        gcfg, step_size=(cfg.blast.step_size if cfg.blast.enabled
+                         else 0)) if gcfg else None
+    counters = {"straggler_steps": 0, "ckpt_fallbacks": 0,
+                "anomaly_steps": 0, "skipped_steps": 0,
+                "spike_steps": 0, "rewinds": 0, "steps_replayed": 0}
 
     stop = {"flag": False}
 
@@ -72,22 +110,70 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
 
     history: list[dict] = []
     durations: list[float] = []
+
+    def emit(event: dict):
+        history.append(event)
+        if log_fn:
+            log_fn(event)
+        else:
+            print(f"[{event['event']}] {event}")
+
     try:
-        for i in range(start, loop.total_steps):
+        i = start
+        while i < loop.total_steps:
+            if faults is not None:
+                faults.on_host_step(i)
             batch = {k: jax.numpy.asarray(v)
                      for k, v in source.batch(i).items()}
-            t0 = time.time()
+            if faults is not None:
+                batch.update({k: jax.numpy.asarray(v) for k, v
+                              in faults.step_scalars(i).items()})
+            t0 = time.monotonic()
+            if faults is not None:
+                faults.on_timed_step(i)
             state, metrics = step_fn(state, batch)
             jax.block_until_ready(metrics["loss"])
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             durations.append(dt)
             med = float(np.median(durations[-50:]))
             if len(durations) > 5 and dt > loop.straggler_factor * med:
-                print(f"[straggler] step {i}: {dt:.3f}s "
-                      f"(median {med:.3f}s)")
+                counters["straggler_steps"] += 1
+                emit({"event": "straggler", "step": i,
+                      "sec_per_step": dt, "median_s": med})
+
+            loss = float(np.asarray(metrics["loss"]))
+            device_anomaly = bool(np.asarray(metrics["anomaly"]))
+            if guard is not None:
+                verdict = guard.observe(i, loss, device_anomaly)
+                counters.update(guard.counters)
+                if verdict == "rewind":
+                    target = ckpt.latest_intact_step() if ckpt else None
+                    if (target is not None
+                            and guard.counters["rewinds"]
+                            < gcfg.max_rewinds):
+                        state = ckpt.restore_state(state)
+                        counters["ckpt_fallbacks"] = ckpt.fallbacks
+                        new_i = int(np.asarray(state.step))
+                        guard.note_rewind(i, new_i)
+                        counters.update(guard.counters)
+                        emit({"event": "rewind", "step": i,
+                              "to_step": new_i,
+                              "consecutive": gcfg.max_consecutive})
+                        i = new_i
+                        continue
+                    if ckpt is not None:
+                        raise TrainingDivergedError(
+                            i, guard.consecutive,
+                            guard.counters["rewinds"])
+                    # no checkpointing: log and push on
+                    guard.reset()
+                    emit({"event": "rewind_unavailable", "step": i})
+
             if i % loop.log_every == 0 or i == loop.total_steps - 1:
                 m = {k: float(np.asarray(v)) for k, v in metrics.items()}
-                m.update(step=i, sec_per_step=dt)
+                if ckpt:
+                    counters["ckpt_fallbacks"] = ckpt.fallbacks
+                m.update(step=i, sec_per_step=dt, **counters)
                 history.append(m)
                 if log_fn:
                     log_fn(m)
@@ -101,9 +187,17 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
                 if ckpt:
                     ckpt.save(i + 1, state, blocking=True)
                 break
+            i += 1
     finally:
+        propagating = sys.exc_info()[1] is not None
         if ckpt:
-            ckpt.wait()
+            if propagating:
+                try:          # don't mask the in-flight exception
+                    ckpt.wait()
+                except Exception:
+                    pass
+            else:
+                ckpt.wait()
         for sig, h in old_handlers.items():
             signal.signal(sig, h)
     return state, history

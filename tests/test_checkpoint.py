@@ -1,13 +1,19 @@
-"""Checkpointer: roundtrip, atomicity, keep-k, latest discovery."""
+"""Checkpointer: roundtrip, atomicity, keep-k, latest discovery,
+crc32 integrity manifest, corrupt/torn fallback, crash-window recovery,
+async write-failure surfacing."""
+import json
 import os
+import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from conftest import tiny_cfg
 from repro.checkpointing.checkpoint import Checkpointer
 from repro.training import step as ts
+from repro.training.faults import CheckpointCorruptionError
 
 
 def test_roundtrip(tmp_path):
@@ -49,3 +55,173 @@ def test_async_save(tmp_path):
     ck.save(5, state, blocking=False)
     ck.wait()
     assert ck.latest_step() == 5
+
+
+def _dict_state(step, seed=0):
+    r = np.random.default_rng(seed)
+    return {"step": np.int32(step),
+            "w": r.standard_normal((8, 8)).astype(np.float32),
+            "b": r.standard_normal(8).astype(np.float32)}
+
+
+def _bitflip(d, step):
+    f = os.path.join(d, f"step_{step:08d}", "arrays.npz")
+    with open(f, "r+b") as fh:
+        fh.seek(0, os.SEEK_END)
+        off = fh.tell() // 2
+        fh.seek(off)
+        b = fh.read(1)
+        fh.seek(off)
+        fh.write(bytes([b[0] ^ 1]))
+
+
+def test_async_write_failure_surfaces(tmp_path, monkeypatch):
+    """A background write that dies must not die silently: the captured
+    exception re-raises on wait() AND on the next save()."""
+    ck = Checkpointer(str(tmp_path))
+    boom = RuntimeError("disk full")
+
+    def bad_savez(*a, **kw):
+        raise boom
+
+    monkeypatch.setattr(np, "savez", bad_savez)
+    ck.save(1, _dict_state(1), blocking=False)
+    with pytest.raises(RuntimeError, match="disk full"):
+        ck.wait()
+    # error is cleared after being raised once
+    ck.wait()
+    ck.save(2, _dict_state(2), blocking=False)
+    ck._thread.join()        # error captured before unpatching savez
+    monkeypatch.undo()
+    with pytest.raises(RuntimeError, match="disk full"):
+        ck.save(3, _dict_state(3), blocking=True)
+    # the failed saves left nothing behind; a clean save works
+    ck.save(4, _dict_state(4), blocking=True)
+    assert ck.latest_intact_step() == 4
+
+
+def test_crc_bitflip_detected_and_fallback(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    for s in (1, 2, 3):
+        ck.save(s, _dict_state(s, seed=s), blocking=True)
+    _bitflip(str(tmp_path), 3)
+    assert not ck.verify(3)
+    assert ck.verify(2)
+    with pytest.raises(CheckpointCorruptionError):
+        ck.restore(_dict_state(0), step=3)
+    got = ck.restore(_dict_state(0))     # step=None: newest INTACT
+    assert int(got["step"]) == 2
+    assert ck.fallbacks == 1
+    np.testing.assert_array_equal(got["w"], _dict_state(2, seed=2)["w"])
+
+
+def test_torn_checkpoint_ignored(tmp_path):
+    """A directory with garbage/missing files never satisfies verify
+    and restore falls back past it."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(1, _dict_state(1), blocking=True)
+    torn = tmp_path / "step_00000005"
+    torn.mkdir()
+    (torn / "meta.json").write_text("{not json")
+    assert ck.steps() == [1, 5]
+    assert not ck.verify(5)
+    assert ck.latest_intact_step() == 1
+    got = ck.restore(_dict_state(0))
+    assert int(got["step"]) == 1
+
+
+def test_leftover_tmp_and_old_recovered(tmp_path):
+    """Crash-window recovery: an orphaned .old (final rename never
+    happened) is promoted back; stale .tmp dirs are dropped; neither
+    suffix is ever listed by steps()."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(4, _dict_state(4), blocking=True)
+    # simulate a writer killed mid-swap: final parked at .old, new tmp
+    final = tmp_path / "step_00000004"
+    os.replace(final, str(final) + ".old")
+    stale = tmp_path / "step_00000009.tmp"
+    stale.mkdir()
+    (stale / "junk").write_text("x")
+    ck2 = Checkpointer(str(tmp_path))
+    assert ck2.steps() == [4]
+    assert ck2.verify(4)
+    assert not (tmp_path / "step_00000009.tmp").exists()
+    assert not (tmp_path / "step_00000004.old").exists()
+
+
+def test_gc_never_deletes_newest_intact(tmp_path):
+    """keep-k retention with the newest k checkpoints corrupt: the
+    newest INTACT one is protected from GC and restore reaches it."""
+    ck = Checkpointer(str(tmp_path), keep=2)
+    fl = {"corrupt": set()}
+
+    def hook(path, step):
+        if step in fl["corrupt"]:
+            f = os.path.join(path, "arrays.npz")
+            with open(f, "r+b") as fh:
+                fh.seek(0, os.SEEK_END)
+                off = fh.tell() // 2
+                fh.seek(off)
+                b = fh.read(1)
+                fh.seek(off)
+                fh.write(bytes([b[0] ^ 1]))
+
+    ck.fault_hook = hook
+    fl["corrupt"] = {3, 4}
+    for s in (1, 2, 3, 4):
+        ck.save(s, _dict_state(s, seed=s), blocking=True)
+    # keep=2 would retain only {3, 4} — both corrupt; step 2 must
+    # survive as the newest intact checkpoint
+    assert 2 in ck.steps()
+    assert ck.latest_intact_step() == 2
+    got = ck.restore(_dict_state(0))
+    assert int(got["step"]) == 2
+
+
+def test_no_intact_checkpoint_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(1, _dict_state(1), blocking=True)
+    _bitflip(str(tmp_path), 1)
+    with pytest.raises(CheckpointCorruptionError, match="no intact"):
+        ck.restore(_dict_state(0))
+
+
+def test_overwrite_same_step_has_no_crash_window(tmp_path, monkeypatch):
+    """Re-saving an existing step: if the process dies between parking
+    the old dir and renaming the new one in, the next Checkpointer
+    promotes the parked .old — the previous intact checkpoint is never
+    destroyed before its replacement is in place."""
+    d = str(tmp_path)
+    ck = Checkpointer(d)
+    ck.save(5, _dict_state(5, seed=1), blocking=True)
+    orig = dict(np.load(os.path.join(d, "step_00000005", "arrays.npz")))
+
+    real_replace = os.replace
+
+    def crashy_replace(src, dst):
+        if src.endswith(".tmp"):       # die before tmp -> final rename
+            raise KeyboardInterrupt("killed mid-swap")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", crashy_replace)
+    with pytest.raises(KeyboardInterrupt):
+        ck.save(5, _dict_state(5, seed=2), blocking=True)
+    monkeypatch.undo()
+    # final is gone (parked at .old) — recovery promotes it back
+    ck2 = Checkpointer(d)
+    assert ck2.verify(5)
+    got = ck2.restore(_dict_state(0))
+    np.testing.assert_array_equal(got["w"], orig["w"])
+
+
+def test_legacy_checkpoint_without_manifest_restores(tmp_path):
+    """Pre-manifest checkpoints (no 'checksums' in meta.json) still
+    verify via a load test and restore."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(3, _dict_state(3), blocking=True)
+    mp = os.path.join(str(tmp_path), "step_00000003", "meta.json")
+    with open(mp, "w") as f:
+        json.dump({"step": 3}, f)
+    assert ck.verify(3)
+    got = ck.restore(_dict_state(0))
+    assert int(got["step"]) == 3
