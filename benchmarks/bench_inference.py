@@ -61,9 +61,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_cfg, replace_blast, row, timeit
+from benchmarks.common import (bench_cfg, replace_blast, row, timeit,
+                               write_bench_artifact)
 from repro.core.prune_grow import initial_mask
 from repro.models import registry
+from repro.obs.export import write_chrome_trace
+from repro.obs.metrics import parse_prometheus_text
+from repro.obs.trace import Tracer
 from repro.serving import engine, export, serve_loop
 from repro.serving.faults import (BackpressureError, FaultPlan,
                                   LaneFaultError)
@@ -777,6 +781,135 @@ def _chaos_sweep(cfg, label: str, params, *, results: list):
     return chaos, wd, shed
 
 
+def _obs_run(cfg, params, *, tracer=None, seed: int = 7):
+    """One deterministic engine workload, optionally traced — the
+    parity pair for the zero-overhead-tracing oracle."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32) for n in (7, 5, 9, 6)]
+    eng = engine.Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
+                        page_size=4, tracer=tracer)
+    for p in prompts:
+        eng.submit(p, 12)
+    return eng, eng.run()
+
+
+def _obs_crash_postmortem(cfg, params, *, seed: int = 5):
+    """A poisoned-lane + stepper-crash run with the flight recorder
+    attached: the watchdog and the supervisor each freeze the span ring
+    into a postmortem. Returns (tracer, victim uids, results)."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32) for n in (7, 5, 9, 6)]
+    tracer = Tracer(capacity=1024)
+
+    async def drive():
+        plan = (FaultPlan(seed=seed).poison_logits(2, 1)
+                .crash(4, device_lost=False))
+        eng = engine.Engine(cfg, params, max_batch=2, max_len=48,
+                            slab_k=4, page_size=4, faults=plan,
+                            tracer=tracer)
+        front = AsyncEngine(eng, max_recoveries=2)
+        async with front:
+            streams = [await front.submit_async(p, 12) for p in prompts]
+            results = {}
+            for s in streams:
+                try:
+                    res = await s.result()
+                except Exception as e:
+                    results[s.uid] = e
+                else:
+                    results[res.uid] = res
+        return results
+
+    got = asyncio.run(asyncio.wait_for(drive(), timeout=300.0))
+    uids = sorted(got)
+    return tracer, uids, got
+
+
+def _obs_sweep(cfg, label: str, params, *, results: list,
+               trace_out: str, postmortem_out: str):
+    """--obs-only rows for ``BENCH_obs.json``: (a) tracing parity — the
+    same workload traced and untraced emits bitwise-identical tokens
+    (spans attach only at existing host syncs); (b) a Prometheus
+    exposition round-trip over the traced engine's registry; (c) a
+    crash run whose flight recorder yields postmortems carrying the
+    victims' span timelines. The Perfetto trace and the postmortem JSON
+    land on disk BEFORE the asserts run (CI artifacts either way)."""
+    eng_off, res_off = _obs_run(cfg, params)
+    tracer = Tracer(capacity=4096)
+    t0 = time.monotonic()
+    eng_on, res_on = _obs_run(cfg, params, tracer=tracer)
+    traced_s = time.monotonic() - t0
+    a = {u: r.tokens for u, r in res_off.items()}
+    b = {u: r.tokens for u, r in res_on.items()}
+    bitwise = (set(a) == set(b)
+               and all(np.array_equal(a[u], b[u]) for u in a))
+    write_chrome_trace(trace_out, tracer.records)
+    with open(trace_out) as f:
+        n_events = len(json.load(f)["traceEvents"])
+    prom = eng_on.metrics.prometheus_text()
+    parsed = parse_prometheus_text(prom)
+    snap = eng_on.metrics.snapshot()
+    prom_ok = (parsed["blast_decode_tokens"] == snap["decode_tokens"]
+               and parsed["blast_ttft_s_count"]
+               == snap["ttft_s"]["count"])
+    row(f"engine_{label}_obs_parity", traced_s * 1e6,
+        f"bitwise={bitwise} spans={len(tracer.records)} "
+        f"trace_events={n_events} prom_samples={len(parsed)}")
+    results.append({
+        "name": f"engine_{label}_obs_parity",
+        "tokens_bitwise_identical": bitwise,
+        "spans_recorded": len(tracer.records),
+        "trace_events": n_events,
+        "prometheus_samples": len(parsed),
+        "prometheus_roundtrip_ok": prom_ok,
+        "traced_run_s": traced_s,
+    })
+
+    pm_tracer, uids, got = _obs_crash_postmortem(cfg, params)
+    pms = list(pm_tracer.postmortems)
+    with open(postmortem_out, "w") as f:
+        json.dump(pms, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {postmortem_out} ({len(pms)} postmortems)")
+    victim_spans = 0
+    if pms:
+        last = pms[-1]
+        span_uids = {s["attrs"].get("uid") for s in last["spans"]} | {
+            u for s in last["spans"]
+            for u in (s["attrs"].get("uids") or ())}
+        victim_spans = sum(u in span_uids for u in uids)
+    row(f"engine_{label}_obs_postmortem", 0.0,
+        f"postmortems={len(pms)} victims_with_spans={victim_spans}")
+    results.append({
+        "name": f"engine_{label}_obs_postmortem",
+        "postmortems": len(pms),
+        "postmortem_reasons": [p["reason"] for p in pms],
+        "victims_with_spans": victim_spans,
+        "requests": len(uids),
+    })
+    return {"bitwise": bitwise, "spans": len(tracer.records),
+            "events": n_events, "prom_ok": prom_ok, "pms": pms,
+            "victim_spans": victim_spans, "uids": uids}
+
+
+def _check_obs_guarantees(obs) -> None:
+    """--obs-only hard asserts: tracing changes no output bits, the
+    Perfetto export is non-trivial, the exposition round-trips, and
+    every crash postmortem carries a non-empty span timeline that
+    includes the victims."""
+    assert obs["bitwise"], "tracing changed emitted tokens"
+    assert obs["spans"] > 0 and obs["events"] >= obs["spans"]
+    assert obs["prom_ok"], "prometheus exposition did not round-trip"
+    assert obs["pms"], "crash run produced no postmortem"
+    assert all(p["spans"] for p in obs["pms"]), \
+        "postmortem with an empty flight-recorder ring"
+    assert obs["victim_spans"] > 0, \
+        "no victim request appears in the postmortem timeline"
+    print("obs guarantees OK")
+
+
 def _check_chaos_guarantees(chaos, wd, shed) -> None:
     """--chaos-only hard asserts (acceptance criteria), on the SAME
     traces the rows were measured from: (a) the chaos parity oracle —
@@ -947,11 +1080,14 @@ def _check_paged_guarantees(cfg, params) -> None:
 
 def main(smoke: bool = False, out: str = "BENCH_serving.json",
          mixed_only: bool = False, frontdoor_only: bool = False,
-         chaos_only: bool = False):
+         chaos_only: bool = False, obs_only: bool = False,
+         trace_out: str = "BENCH_obs_trace.json",
+         postmortem_out: str = "BENCH_obs_postmortem.json"):
     results: list[dict] = []
     check = None
     chaos_payload = None
-    if smoke or mixed_only or frontdoor_only or chaos_only:
+    obs_payload = None
+    if smoke or mixed_only or frontdoor_only or chaos_only or obs_only:
         # tiny config through the REAL dispatch path: decode slabs,
         # per-lane frontiers, paged pool, packed XLA-backend kernels
         cfg = bench_cfg(num_layers=1, d_model=64, d_ff=128,
@@ -961,6 +1097,11 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
         if chaos_only:
             chaos_payload = _chaos_sweep(cfg, "dense", params,
                                          results=results)
+        elif obs_only:
+            obs_payload = _obs_sweep(cfg, "dense", params,
+                                     results=results,
+                                     trace_out=trace_out,
+                                     postmortem_out=postmortem_out)
         elif frontdoor_only:
             _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
                              results=results)
@@ -983,7 +1124,7 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
             _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
                              results=results, n_batch=4, n_inter=3,
                              batch_budget=13)
-        if not (frontdoor_only or chaos_only):
+        if not (frontdoor_only or chaos_only or obs_only):
             _mixed_sweep(cfg, "dense", params, sparsity=0.0,
                          results=results, n_req=6, max_batch=2,
                          new_tokens=9, prefill_chunk=4, reps=2)
@@ -1033,20 +1174,21 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
         _frontdoor_sweep(scfg, "packed_s90", packed, sparsity=0.9,
                          results=results)
 
-    artifact = {"bench": "chaos" if chaos_only else "serving",
-                "smoke": (smoke or mixed_only or frontdoor_only
-                          or chaos_only),
-                "rows": results}
-    with open(out, "w") as f:
-        json.dump(artifact, f, indent=2)
-        f.write("\n")
-    print(f"# wrote {out} ({len(results)} serving rows)")
+    write_bench_artifact(
+        out,
+        "chaos" if chaos_only else "obs" if obs_only else "serving",
+        results,
+        smoke=(smoke or mixed_only or frontdoor_only or chaos_only
+               or obs_only))
     if check is not None:
         # hard asserts AFTER the artifact lands on disk, so the CI
         # upload preserves the measured rows even when parity breaks —
         # exactly the runs where the trajectory matters most
         if chaos_only:
             _check_chaos_guarantees(*chaos_payload)
+            return
+        if obs_only:
+            _check_obs_guarantees(obs_payload)
             return
         if frontdoor_only:
             _check_frontdoor_guarantees(*check)
@@ -1079,7 +1221,19 @@ if __name__ == "__main__":
                          "oracle, watchdog hang recovery, load-shed "
                          "flood + their hard asserts, writing "
                          "BENCH_chaos.json (CI chaos-smoke job)")
+    ap.add_argument("--obs-only", action="store_true",
+                    help="just the observability suite: traced-vs-"
+                         "untraced bitwise parity, Prometheus round-"
+                         "trip, Perfetto export + crash postmortem "
+                         "artifacts (CI obs-smoke job)")
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--trace-out", default="BENCH_obs_trace.json",
+                    help="Perfetto/Chrome trace artifact (--obs-only)")
+    ap.add_argument("--postmortem-out",
+                    default="BENCH_obs_postmortem.json",
+                    help="flight-recorder dump artifact (--obs-only)")
     args = ap.parse_args()
     main(smoke=args.smoke, out=args.out, mixed_only=args.mixed_only,
-         frontdoor_only=args.frontdoor_only, chaos_only=args.chaos_only)
+         frontdoor_only=args.frontdoor_only, chaos_only=args.chaos_only,
+         obs_only=args.obs_only, trace_out=args.trace_out,
+         postmortem_out=args.postmortem_out)

@@ -19,7 +19,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import bench_cfg, replace_blast, row
+from benchmarks.common import (bench_cfg, replace_blast, row,
+                               write_bench_artifact)
 from repro.data.pipeline import SyntheticLM
 from repro.optim import adamw
 from repro.training import train_loop
@@ -185,8 +186,7 @@ def chaos_main(out: str):
     rows.append(_scenario_nan_skip())
     with tempfile.TemporaryDirectory() as wd:
         rows.append(_scenario_corrupt_fallback(wd))
-    with open(out, "w") as f:           # artifact BEFORE any assert
-        json.dump({"bench": "train_chaos", "rows": rows}, f, indent=2)
+    write_bench_artifact(out, "train_chaos", rows)  # BEFORE any assert
     for r in rows:
         row(f"chaos_{r['scenario']}", 0.0,
             f"bitwise={r['bitwise_identical']}")

@@ -1,9 +1,17 @@
 """Shared benchmark utilities. Every benchmark prints
-``name,us_per_call,derived`` CSV rows (task spec)."""
+``name,us_per_call,derived`` CSV rows (task spec), and every
+``BENCH_*.json`` artifact goes through ``write_bench_artifact`` so CI
+runs are comparable across commits: each file carries the same
+provenance stamp (git sha, jax/jaxlib versions, device kind, UTC
+timestamp)."""
 from __future__ import annotations
 
 import dataclasses
+import datetime
+import json
+import subprocess
 import time
+from collections.abc import Mapping
 
 import jax
 import jax.numpy as jnp
@@ -48,3 +56,58 @@ def bench_cfg(**overrides) -> ModelConfig:
 def replace_blast(cfg, **kw):
     return dataclasses.replace(cfg, blast=dataclasses.replace(cfg.blast,
                                                               **kw))
+
+
+# ------------------------------------------------------------ artifacts
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def provenance() -> dict:
+    """The stamp every BENCH_*.json carries (who/what/where/when)."""
+    try:
+        import jaxlib
+        jaxlib_version = jaxlib.__version__
+    except Exception:
+        jaxlib_version = "unknown"
+    dev = jax.devices()[0]
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib_version,
+        "device_kind": getattr(dev, "device_kind", dev.platform),
+        "platform": dev.platform,
+        "timestamp_unix": time.time(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(),
+    }
+
+
+def _json_safe(x):
+    """Coerce Mapping facades / numpy scalars that land in rows."""
+    if isinstance(x, Mapping):
+        return dict(x)
+    if isinstance(x, np.generic):
+        return x.item()
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    raise TypeError(f"not JSON serializable: {type(x).__name__}")
+
+
+def write_bench_artifact(out: str, bench: str, rows: list,
+                         **extra) -> dict:
+    """Write a BENCH_*.json with the unified schema:
+    ``{"bench", "provenance", "rows", **extra}``. Rows may contain
+    StatsView/numpy values. Returns the written payload."""
+    payload = {"bench": bench, "provenance": provenance(),
+               "rows": rows, **extra}
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, default=_json_safe)
+        f.write("\n")
+    print(f"# wrote {out} ({len(rows)} rows)")
+    return payload

@@ -33,11 +33,13 @@ import json
 import os
 import shutil
 import threading
+import time
 import zlib
 
 import jax
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.training.faults import CheckpointCorruptionError
 
 
@@ -77,6 +79,7 @@ class Checkpointer:
         self._error: BaseException | None = None
         self.fallbacks = 0         # corrupt/torn ckpts skipped on restore
         self.fault_hook = None     # training/faults.py corruption port
+        self.tracer = NULL_TRACER  # obs/trace.py; train_loop installs
         os.makedirs(directory, exist_ok=True)
         self._recover_leftovers()
 
@@ -103,6 +106,7 @@ class Checkpointer:
         previous async write's captured exception (if any) HERE, before
         gathering for the new save."""
         from repro.training.step import TrainState
+        t_save = time.monotonic()
         tree = {"step": state.step, "params": state.params,
                 "opt_state": state.opt_state, "masks": state.masks,
                 "rng": state.rng} if isinstance(state, TrainState) \
@@ -148,6 +152,11 @@ class Checkpointer:
                     self._error = e
             self._thread = threading.Thread(target=runner, daemon=True)
             self._thread.start()
+        if self.tracer.enabled:
+            # host gather + (blocking) write, or gather + dispatch for
+            # the async path — the part that holds up training
+            self.tracer.span_at("ckpt.save", t_save, time.monotonic(),
+                                step=int(step), blocking=blocking)
 
     def wait(self):
         """Join any in-flight write and re-raise its exception."""
@@ -239,19 +248,27 @@ class Checkpointer:
         the newest INTACT checkpoint is restored — corrupt or torn
         newer ones are skipped automatically (counted in
         ``fallbacks``)."""
-        if step is not None:
-            if not self.verify(step):
-                raise CheckpointCorruptionError(step, self.dir)
-            return self._load(template, step, shardings)
-        steps = self.steps()
-        if not steps:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        for skipped, s in enumerate(reversed(steps)):
-            if self.verify(s):
-                self.fallbacks += skipped
-                return self._load(template, s, shardings)
-        raise CheckpointCorruptionError(
-            steps[-1], self.dir, "no intact checkpoint to fall back to")
+        with self.tracer.span("ckpt.restore",
+                              step=-1 if step is None else int(step)):
+            if step is not None:
+                if not self.verify(step):
+                    raise CheckpointCorruptionError(step, self.dir)
+                return self._load(template, step, shardings)
+            steps = self.steps()
+            if not steps:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+            for skipped, s in enumerate(reversed(steps)):
+                if self.verify(s):
+                    if skipped:
+                        # newer checkpoints were corrupt/torn: the
+                        # integrity manifest routed restore past them
+                        self.tracer.event("ckpt.fallback",
+                                          skipped=skipped, to_step=s)
+                    self.fallbacks += skipped
+                    return self._load(template, s, shardings)
+            raise CheckpointCorruptionError(
+                steps[-1], self.dir,
+                "no intact checkpoint to fall back to")
 
     def restore_state(self, template_state, step: int | None = None,
                       shardings=None):

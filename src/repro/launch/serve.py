@@ -97,6 +97,10 @@ def main():
                     help="gap between interactive arrivals")
     ap.add_argument("--deadline-s", type=float, default=0.5,
                     help="interactive SLA deadline (EDF within class)")
+    ap.add_argument("--trace-out", default=None,
+                    help="record request spans (obs/trace.py) and "
+                         "write a Chrome/Perfetto trace JSON here — "
+                         "open in https://ui.perfetto.dev")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -134,11 +138,16 @@ def main():
     print("serving memory:", export.memory_report(cfg, params))
 
     rng = np.random.default_rng(0)
+    tracer = None
+    if args.trace_out:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
     if args.frontdoor:
         if not registry.supports_prefill_chunk(cfg):
             raise SystemExit(f"--frontdoor needs an engine-servable "
                              f"family; {cfg.family!r} is not")
-        _frontdoor(cfg, params, args, rng)
+        _frontdoor(cfg, params, args, rng, tracer=tracer)
+        _write_trace(args, tracer)
         return
     if args.oracle or not registry.supports_prefill_chunk(cfg):
         prompts = jnp.asarray(rng.integers(
@@ -161,7 +170,8 @@ def main():
         paged=not args.contiguous, page_size=args.page_size,
         n_pages=args.n_pages or None, prefix_cache=args.prefix_cache,
         mixed=args.mixed,
-        prefill_token_budget=args.prefill_token_budget or None)
+        prefill_token_budget=args.prefill_token_budget or None,
+        tracer=tracer)
     print(f"generated {len(toks)} seqs — {stats['tok_per_s']:.1f} tok/s "
           f"({stats['decode_slabs']} slabs of {args.slab_k}, "
           f"{stats['prefill_chunks']} prefill chunks, "
@@ -175,9 +185,19 @@ def main():
              if args.mixed else ""))
     for p, t in list(zip(prompts, toks))[:2]:
         print(t[p.size:])
+    _write_trace(args, tracer)
 
 
-def _frontdoor(cfg, params, args, rng):
+def _write_trace(args, tracer):
+    if tracer is None:
+        return
+    from repro.obs.export import write_chrome_trace
+    write_chrome_trace(args.trace_out, tracer.records)
+    print(f"wrote {len(tracer.records)} spans to {args.trace_out} "
+          f"(open in https://ui.perfetto.dev)")
+
+
+def _frontdoor(cfg, params, args, rng, tracer=None):
     """The asyncio front door over a live multi-tenant trace: batch
     jobs saturate the lanes, interactive requests trickle in and (with
     --sla / --preempt) jump the queue or preempt a batch lane's KV to
@@ -198,7 +218,8 @@ def _frontdoor(cfg, params, args, rng):
                       prefill_chunk=args.prefill_chunk,
                       slab_k=args.slab_k, page_size=args.page_size,
                       n_pages=args.n_pages or None, scheduler=sched,
-                      mixed=args.mixed, preempt=args.preempt)
+                      mixed=args.mixed, preempt=args.preempt,
+                      tracer=tracer)
 
     # jit-warm both request shapes outside the served trace
     warm = build()

@@ -1,0 +1,27 @@
+"""Unified observability: typed metrics registry, request-span tracing
+with a crash flight recorder, and Chrome-trace/Perfetto export.
+
+Three pieces, used together or alone:
+
+  * ``metrics.MetricsRegistry`` — typed counters / gauges / histograms
+    behind a backward-compatible dict view (``registry.view()`` walks
+    and mutates like the old hand-edited ``Engine.stats`` dict), with
+    Prometheus text exposition and a JSON-able snapshot. Reset derives
+    from the registry itself, so a newly added metric can never be
+    missed by ``reset_stats`` again.
+  * ``trace.Tracer`` — per-request / per-step spans recorded at
+    EXISTING host-sync timestamps (``span_at``): tracing adds zero
+    extra device syncs and zero graph changes, and the greedy tokens /
+    TrainState bits are identical tracing on or off
+    (tests/test_obs.py). The last N spans live in a bounded ring
+    buffer — the flight recorder — and ``postmortem()`` dumps them to
+    JSON when a watchdog / supervisor / rewind fires. ``NULL_TRACER``
+    is the disabled default: a shared no-op that never allocates a
+    span object on the hot path.
+  * ``export`` — Chrome trace-event JSON (open in Perfetto / chrome
+    about:tracing) from any span iterable.
+"""
+from repro.obs.metrics import MetricsRegistry, StatsView  # noqa: F401
+from repro.obs.trace import NULL_TRACER, Span, Tracer     # noqa: F401
+from repro.obs.export import (chrome_trace_events,        # noqa: F401
+                              to_chrome_trace, write_chrome_trace)

@@ -99,6 +99,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.serving.faults import (BackpressureError, DeadlineExceededError,
                                   LaneFaultError, OffloadCapacityError,
                                   OffloadCorruptionError,
@@ -181,6 +183,92 @@ def _pow2_bucket(n: int, cap: int) -> int:
     return max(1, min(cap, 1 << max(0, (n - 1).bit_length())))
 
 
+# every engine stat, declared ONCE with its kind (obs/metrics.py):
+# reset_stats / snapshot / Prometheus exposition all derive from the
+# registry, so adding a metric here is the whole job — there is no
+# second list to forget (the drift bug class that bit PR 6 and PR 7)
+_METRICS = [
+    ("counter", "prefill_chunks", "jitted prefill chunk calls"),
+    ("counter", "prefill_tokens", "prompt tokens actually computed"),
+    ("counter", "decode_slabs", "on-device decode slab calls"),
+    ("counter", "decode_steps", "decode steps (slab_k per slab)"),
+    ("counter", "decode_tokens", "tokens emitted by decode"),
+    ("counter", "generated_tokens", "all tokens emitted"),
+    ("counter", "prefill_s", "seconds in prefill calls"),
+    ("counter", "decode_s", "seconds in decode slabs"),
+    ("counter", "admitted", "requests admitted to lanes"),
+    ("counter", "evicted", "lanes freed (finish or failure)"),
+    ("counter", "truncated", "requests that hit the slot cap"),
+    # mixed batching: fused decode+prefill calls, the time spent in
+    # them, and the stall counter — a stalled decode step is one
+    # blocking prefill call that ran while live decode lanes waited
+    # (phased admission; structurally 0 when mixed)
+    ("counter", "mixed_steps", "fused decode+prefill calls"),
+    ("counter", "mixed_s", "seconds in fused mixed calls"),
+    ("counter", "stalled_decode_steps",
+     "blocking prefill calls that stalled live decode lanes"),
+    # paged attention read accounting (page units): what the
+    # block-table gather touched vs a dense max_len read
+    ("counter", "pages_read", "pages the paged attention gathered"),
+    ("counter", "pages_read_dense_equiv",
+     "pages a dense max_len read would have touched"),
+    ("gauge", "peak_kv_pages", "page pool in-use high-water"),
+    # scheduler observability: queue depth high-water, page-gate
+    # rejections, request queued time
+    ("gauge", "queue_depth_peak", "admission queue depth high-water"),
+    ("counter", "admission_rejections",
+     "distinct queue heads blocked by the page gate"),
+    ("counter", "queued_s_total", "total seconds requests queued"),
+    ("gauge", "queued_s_max", "longest single queued wait"),
+    # prefix-cache accounting: prompt_tokens is the demand,
+    # prefill_tokens what was computed, the difference the radix hits
+    ("counter", "prompt_tokens", "prompt tokens submitted"),
+    ("counter", "prefix_hits", "admissions with a radix-tree match"),
+    ("counter", "prefix_misses", "admissions with no match"),
+    ("counter", "prefill_tokens_skipped",
+     "prompt tokens covered by shared prefix pages"),
+    ("counter", "cow_copies", "boundary pages copy-on-write duplicated"),
+    ("counter", "cache_evicted_pages",
+     "cached-idle pages reclaimed under pressure"),
+    # preemption/offload accounting: lanes frozen and resumed, pages
+    # round-tripped through host RAM (vs pinned-shared pages that
+    # never left), and the host store's bytes high-water
+    ("counter", "preemptions", "lanes frozen off-device"),
+    ("counter", "restores", "preempted lanes resumed"),
+    ("counter", "offloaded_pages", "pages downloaded to the host store"),
+    ("counter", "restored_pages", "pages scattered back on restore"),
+    ("counter", "preempt_pinned_pages",
+     "shared pages that stayed pinned through preemption"),
+    ("gauge", "offload_bytes_peak",
+     "host offload store bytes high-water"),
+    # page-gate accounting: distinct blocked heads
+    # (admission_rejections) vs blocked steps
+    ("counter", "admission_rejected_steps",
+     "admission attempts a blocked head held off"),
+    # fault tolerance: injected faults that fired, lanes quarantined
+    # (non-finite logits or a corrupted offload record), watchdog
+    # recoveries (crashes + hangs, split out), lanes that came back
+    # from offloaded KV with ZERO re-prefill, tokens re-prefilled by
+    # relaunches, and requests shed/cancelled before or during decode
+    ("counter", "faults_injected", "injected faults that fired"),
+    ("counter", "lanes_quarantined", "lanes torn down as untrusted"),
+    ("counter", "recoveries", "supervisor recoveries completed"),
+    ("counter", "recovered_zero_reprefill",
+     "crash-salvaged lanes restored with zero re-prefill"),
+    ("counter", "re_prefilled_tokens",
+     "tokens re-prefilled by relaunches"),
+    ("counter", "shed_requests", "submits shed by the queue bound"),
+    ("counter", "cancelled", "requests cancelled (any stage)"),
+    ("counter", "deadline_cancelled", "cancelled by SLA deadline"),
+    ("counter", "watchdog_hangs", "hung steps the watchdog condemned"),
+    ("counter", "engine_crashes", "engine-thread crashes recovered"),
+    # per-request latency samples (monotonic clock): TTFT and
+    # inter-token gaps, folded into p50/p95 by finalize_stats
+    ("histogram", "ttft_s", "submit -> first token seconds"),
+    ("histogram", "itl_s", "inter-token gap seconds"),
+]
+
+
 class Engine:
     """Continuous-batching greedy generation over pruned/packed weights.
 
@@ -232,7 +320,8 @@ class Engine:
                  preempt: bool = False, offload_store=None,
                  offload_capacity_bytes: int | None = None,
                  admission_queue_limit: int | None = None,
-                 enforce_deadlines: bool = False, faults=None):
+                 enforce_deadlines: bool = False, faults=None,
+                 tracer=None):
         if not registry.supports_prefill_chunk(cfg):
             raise NotImplementedError(
                 f"family {cfg.family!r} is not KV-cache servable by the "
@@ -256,6 +345,16 @@ class Engine:
             raise ValueError("preempt=True requires paged=True (pages "
                              "are the unit of offload)")
         assert slab_k >= 1
+        # NOT ``tracer or ...``: same falsy-default bug class as the
+        # scheduler below — a fresh Tracer with an empty ring is truthy
+        # today, but the guard costs nothing and documents the intent
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.metrics = MetricsRegistry()
+        for kind, name, help in _METRICS:
+            getattr(self.metrics, kind)(name, help)
+        # the backward-compatible dict view: every existing
+        # ``self.stats[...]`` read/write lands on a typed metric
+        self.stats = self.metrics.view()
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -272,6 +371,7 @@ class Engine:
                           else FIFOScheduler(
                               max_batch, max_len,
                               prefill_token_budget=prefill_token_budget))
+        self.scheduler.tracer = self.tracer
         if prefill_token_budget is not None:
             self.scheduler.prefill_token_budget = prefill_token_budget
         elif getattr(self.scheduler, "prefill_token_budget", None) is None:
@@ -341,6 +441,7 @@ class Engine:
             # vectors keep the jit cache O(log max_pages))
             self._offload = (offload_store if offload_store is not None
                              else HostKVStore(offload_capacity_bytes))
+            self._offload.tracer = self.tracer
             self._gather = jax.jit(make_gather_pages_step())
             self._scatter = jax.jit(make_scatter_pages_step())
             # page-unit feasibility moves INTO the scheduler's submit
@@ -386,65 +487,28 @@ class Engine:
             self._offload.fault_hook = plan.on_offload_save
 
     def reset_stats(self):
-        # per-request latency samples (monotonic clock): TTFT and
-        # inter-token gaps, folded into p50/p95 by finalize_stats
-        self._ttft: list[float] = []
-        self._itl: list[float] = []
-        self.stats = {"prefill_chunks": 0, "prefill_tokens": 0,
-                      "decode_slabs": 0, "decode_steps": 0,
-                      "decode_tokens": 0, "generated_tokens": 0,
-                      "prefill_s": 0.0, "decode_s": 0.0, "admitted": 0,
-                      "evicted": 0, "truncated": 0,
-                      # mixed batching: fused decode+prefill calls, the
-                      # time spent in them, and the stall counter — a
-                      # stalled decode step is one blocking prefill
-                      # call that ran while live decode lanes waited
-                      # (phased admission; structurally 0 when mixed)
-                      "mixed_steps": 0, "mixed_s": 0.0,
-                      "stalled_decode_steps": 0,
-                      # paged attention read accounting (page units):
-                      # what the block-table gather touched vs what a
-                      # dense max_len read would have
-                      "pages_read": 0, "pages_read_dense_equiv": 0,
-                      "peak_kv_pages": 0,
-                      # scheduler observability: queue depth high-water,
-                      # page-gate rejections, request queued time
-                      "queue_depth_peak": 0, "admission_rejections": 0,
-                      "queued_s_total": 0.0, "queued_s_max": 0.0,
-                      # prefix-cache accounting: prompt_tokens is the
-                      # demand, prefill_tokens what was actually
-                      # computed, the difference the radix-tree hits
-                      "prompt_tokens": 0, "prefix_hits": 0,
-                      "prefix_misses": 0, "prefill_tokens_skipped": 0,
-                      "cow_copies": 0, "cache_evicted_pages": 0,
-                      # preemption/offload accounting: lanes frozen and
-                      # resumed, pages round-tripped through host RAM
-                      # (vs pinned-shared pages that never left), and
-                      # the host store's bytes high-water
-                      "preemptions": 0, "restores": 0,
-                      "offloaded_pages": 0, "restored_pages": 0,
-                      "preempt_pinned_pages": 0, "offload_bytes_peak": 0,
-                      # page-gate accounting: distinct blocked heads
-                      # (admission_rejections) vs blocked steps
-                      "admission_rejected_steps": 0,
-                      # fault tolerance: injected faults that fired,
-                      # lanes quarantined (non-finite logits or a
-                      # corrupted offload record), watchdog recoveries
-                      # (crashes + hangs, split out), lanes that came
-                      # back from offloaded KV with ZERO re-prefill,
-                      # tokens re-prefilled by relaunches, and requests
-                      # shed/cancelled before or during decode
-                      "faults_injected": 0, "lanes_quarantined": 0,
-                      "recoveries": 0, "recovered_zero_reprefill": 0,
-                      "re_prefilled_tokens": 0, "shed_requests": 0,
-                      "cancelled": 0, "deadline_cancelled": 0,
-                      "watchdog_hangs": 0, "engine_crashes": 0}
+        """Zero every registered metric — DERIVED from the registry
+        (obs/metrics.py), so a metric added to ``_METRICS`` (or
+        auto-registered through the view) can never be missed here;
+        the old hand-listed dict rebuild is gone."""
+        self.metrics.reset()
         if hasattr(self.scheduler, "reset_stats"):
             self.scheduler.reset_stats()
         if getattr(self, "pool", None) is not None:
             self.pool.reset_peaks()
         if getattr(self, "_offload", None) is not None:
             self._offload.reset_peaks()
+
+    # raw latency sample lists, now registry histograms (reset() clears
+    # them in place); exposed under the old names so existing callers
+    # and tests keep appending/reading plain lists
+    @property
+    def _ttft(self) -> list[float]:
+        return self.metrics.histogram("ttft_s").samples
+
+    @property
+    def _itl(self) -> list[float]:
+        return self.metrics.histogram("itl_s").samples
 
     # ------------------------------------------------------------- memory
     @property
@@ -492,6 +556,8 @@ class Engine:
         if (self.admission_queue_limit is not None
                 and len(self.scheduler) >= self.admission_queue_limit):
             self.stats["shed_requests"] += 1
+            self.tracer.event("request.shed",
+                              queue_depth=len(self.scheduler))
             raise BackpressureError(len(self.scheduler),
                                     self.admission_queue_limit,
                                     self._retry_after_hint())
@@ -500,6 +566,11 @@ class Engine:
         req = Request(uid, np.asarray(prompt), max_new_tokens,
                       priority=priority, deadline_s=deadline_s)
         self.scheduler.submit(req)
+        if self.tracer.enabled:
+            self.tracer.event("request.queued", t=req.queued_at,
+                              uid=uid, prompt_len=req.prompt_len,
+                              max_new_tokens=max_new_tokens,
+                              priority=priority)
         self.stats["queue_depth_peak"] = max(
             self.stats["queue_depth_peak"], len(self.scheduler))
         return uid
@@ -657,6 +728,10 @@ class Engine:
         pre = self._recovered_prefix.pop(lane.req.uid, None)
         if pre is not None:
             prompt, gen = pre[0], list(pre[1]) + gen
+        if self.tracer.enabled:
+            self.tracer.event("request.finish", uid=lane.req.uid,
+                              lane=i, tokens=len(gen), ttft_s=ttft,
+                              truncated=truncated)
         return GenResult(lane.req.uid, prompt,
                          np.asarray(gen, np.int32), truncated,
                          ttft_s=ttft)
@@ -695,6 +770,14 @@ class Engine:
         self._dirty = True
         self.stats["evicted"] += 1
         self._finish_times.append(time.monotonic())
+        if self.tracer.enabled:
+            name = ("request.quarantined"
+                    if isinstance(exc, (LaneFaultError,
+                                        OffloadCorruptionError))
+                    else "request.failed")
+            self.tracer.event(name, uid=lane.req.uid, lane=i,
+                              error=type(exc).__name__,
+                              tokens=len(lane.generated))
         return self._failed_result(lane.req, lane.generated, exc)
 
     def _harvest_faults(self, finished: list[GenResult]) -> None:
@@ -843,6 +926,10 @@ class Engine:
         m["bt"][i] = 0
         self._dirty = True
         self.stats["preemptions"] += 1
+        if self.tracer.enabled:
+            self.tracer.event("request.preempt", uid=self._preempted[-1].req.uid,
+                              lane=i, offloaded_pages=len(dl_pages),
+                              pinned_pages=len(pinned))
 
     def _restore_one(self, pre: _Preempted) -> bool:
         """Re-admit one preempted lane: alloc fresh pages for every
@@ -875,6 +962,9 @@ class Engine:
             self.pool.release(pages)
             self._mirror["bt"][i] = 0
             self.stats["lanes_quarantined"] += 1
+            self.tracer.event("request.quarantined", uid=pre.req.uid,
+                              error=type(e).__name__,
+                              tokens=len(pre.generated))
             self._pending_results.append(self._failed_result(
                 pre.req, pre.generated,
                 LaneFaultError(pre.req.uid, -1, reason=str(e))))
@@ -897,6 +987,12 @@ class Engine:
         m["live"][i] = True
         self._dirty = True
         self.stats["restores"] += 1
+        if self.tracer.enabled:
+            self.tracer.event(
+                "request.restore", uid=pre.req.uid, lane=i,
+                frontier=pre.frontier, recovered=pre.recovered,
+                restored_pages=(len(rec.logical) if rec is not None
+                                else 0))
         return True
 
     def _try_restore(self) -> None:
@@ -971,10 +1067,14 @@ class Engine:
     # ----------------------------------------------------------- admission
     def _note_admitted(self, reqs: list[Request]) -> None:
         now = time.monotonic()
+        tr = self.tracer
         for r in reqs:
             q = max(0.0, now - r.queued_at)
             self.stats["queued_s_total"] += q
             self.stats["queued_s_max"] = max(self.stats["queued_s_max"], q)
+            if tr.enabled:
+                tr.event("request.admitted", t=now, uid=r.uid,
+                         queued_s=q, priority=r.priority)
         self.stats["admitted"] += len(reqs)
 
     def _admit(self) -> None:
@@ -1102,6 +1202,13 @@ class Engine:
         first = np.asarray(jax.block_until_ready(jnp.argmax(last, -1)))
         now = time.monotonic()
         self.stats["prefill_s"] += now - t0
+        if self.tracer.enabled:
+            # span from the timestamps this loop already took at its
+            # sync points — tracing adds no sync of its own
+            self.tracer.span_at(
+                "prefill.chunks", t0, now, lanes=len(lane_ids),
+                chunks=len(sizes), tokens=span,
+                uids=[self.lanes[i].req.uid for i in lane_ids])
         for i in lane_ids:
             self._mirror["pending"][i] = int(first[i])
             self.lanes[i].generated.append(int(first[i]))
@@ -1341,6 +1448,11 @@ class Engine:
         self.stats["decode_s"] += now - t0
         self.stats["decode_slabs"] += 1
         self.stats["decode_steps"] += self.slab_k
+        if self.tracer.enabled:
+            self.tracer.span_at(
+                "decode.slab", t0, now, k=self.slab_k,
+                lanes=len(self.active_lanes),
+                uids=[self.lanes[i].req.uid for i in self.active_lanes])
         self._replay(block, now)
 
     def _run_mixed(self, decode_lanes: list[int],
@@ -1403,6 +1515,13 @@ class Engine:
             nxt = np.asarray(jax.block_until_ready(nxt))
             fa = np.asarray(faulted)
         now = time.monotonic()
+        if self.tracer.enabled:
+            self.tracer.span_at(
+                "mixed.step", t0, now, decode_lanes=len(decode_lanes),
+                prefill_lanes=len(plan),
+                prefill_tokens=sum(plan.values()),
+                uids=[self.lanes[i].req.uid
+                      for i in set(decode_lanes) | set(plan)])
         if self.mixed:
             self.stats["mixed_steps"] += 1
         if decode_lanes:
@@ -1545,7 +1664,8 @@ def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
              page_size: int = 16, n_pages: int | None = None,
              attn_backend: str = "xla", prefix_cache: bool = False,
              mixed: bool = False,
-             prefill_token_budget: int | None = None):
+             prefill_token_budget: int | None = None,
+             tracer=None):
     """Batch-convenience wrapper: list of ragged 1-D prompts (or a 2-D
     equal-length array) -> (list of per-request token arrays, stats).
 
@@ -1563,7 +1683,8 @@ def generate(cfg, params, prompts, *, max_new_tokens: int = 32,
                  slab_k=slab_k, eos_id=eos_id, dist=dist, paged=paged,
                  page_size=page_size, n_pages=n_pages,
                  attn_backend=attn_backend, prefix_cache=prefix_cache,
-                 mixed=mixed, prefill_token_budget=prefill_token_budget)
+                 mixed=mixed, prefill_token_budget=prefill_token_budget,
+                 tracer=tracer)
     uids = [eng.submit(p, max_new_tokens) for p in prompts]
     res = eng.run()
     return [res[u].tokens for u in uids], eng.stats

@@ -440,6 +440,14 @@ class AsyncEngine:
     def _do_recover(self, exc: BaseException) -> None:
         """One supervisor pass + stepper restart (watchdog thread; the
         stepper is confirmed dead, so the engine is ours to touch)."""
+        # crash flight-recorder dump FIRST — even a budget-exhausted
+        # failure leaves the last-N-spans timeline behind
+        self.engine.tracer.postmortem(
+            "watchdog_" + ("hang" if isinstance(exc, EngineHangError)
+                           else "crash"),
+            error=type(exc).__name__, recoveries=self._recoveries,
+            budget=self._max_recoveries,
+            open_streams=sorted(self._streams))
         if self._recoveries >= self._max_recoveries or self._stop:
             for s in list(self._streams.values()):
                 s._fail_threadsafe(exc)

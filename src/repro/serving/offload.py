@@ -38,6 +38,7 @@ import zlib
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
 from repro.serving.faults import OffloadCapacityError, OffloadCorruptionError
 
 
@@ -81,6 +82,8 @@ class HostKVStore:
         self.capacity_bytes = capacity_bytes
         self.bytes_peak = 0
         self.fault_hook = None
+        # span tracer (obs/trace.py); the engine installs its own
+        self.tracer = NULL_TRACER
 
     def __len__(self) -> int:
         return len(self._recs)
@@ -111,6 +114,9 @@ class HostKVStore:
             self.fault_hook(rec)
         self._recs[uid] = rec
         self.bytes_peak = max(self.bytes_peak, self.nbytes)
+        if self.tracer.enabled:
+            self.tracer.event("offload.save", uid=uid,
+                              pages=len(logical), bytes=rec.nbytes)
 
     def pop(self, uid: int) -> OffloadRecord | None:
         """Take (and drop) the record for ``uid``, verifying every
@@ -125,7 +131,12 @@ class HostKVStore:
             bad = [lg for i, lg in enumerate(rec.logical)
                    if rec.page_crc(i) != rec.checksums[i]]
             if bad:
+                self.tracer.event("offload.corrupt", uid=uid,
+                                  bad_pages=bad)
                 raise OffloadCorruptionError(uid, bad)
+        if self.tracer.enabled:
+            self.tracer.event("offload.pop", uid=uid,
+                              pages=len(rec.logical), bytes=rec.nbytes)
         return rec
 
     def extend(self, uid: int, logical: list[int], k: np.ndarray,

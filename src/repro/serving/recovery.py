@@ -199,6 +199,13 @@ class Supervisor:
         eng = self.engine
         t0 = time.monotonic()
         device_lost = bool(getattr(exc, "device_lost", False))
+        # the flight recorder holds the last N spans BEFORE the crash:
+        # freeze them first, so the rebuild below (which clears lanes)
+        # cannot disturb the timeline being reported
+        eng.tracer.postmortem(
+            "supervisor_recover", error=type(exc).__name__,
+            device_lost=device_lost,
+            active_uids=[eng.lanes[i].req.uid for i in eng.active_lanes])
         results: list = []
         relaunch: list = []
         salvaged: list = []
@@ -213,7 +220,14 @@ class Supervisor:
             eng.stats["offload_bytes_peak"] = max(
                 eng.stats["offload_bytes_peak"],
                 eng._offload.bytes_peak)
-        return {"latency_s": time.monotonic() - t0,
+        latency = time.monotonic() - t0
+        if eng.tracer.enabled:
+            eng.tracer.span_at("recovery", t0, t0 + latency,
+                               error=type(exc).__name__,
+                               device_lost=device_lost,
+                               salvaged=len(salvaged),
+                               relaunched=len(relaunch))
+        return {"latency_s": latency,
                 "device_lost": device_lost,
                 "salvaged_lanes": len(salvaged),
                 "relaunched_lanes": len(relaunch),

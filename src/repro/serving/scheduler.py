@@ -36,6 +36,8 @@ from typing import Callable, Iterable
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 
 @dataclasses.dataclass
 class Request:
@@ -103,6 +105,9 @@ class FIFOScheduler:
         # page-unit check): callable(req) raising ValueError — so slot
         # and page infeasibility BOTH reject synchronously at submit
         self.feasibility: Callable[[Request], None] | None = None
+        # engine-installed span tracer (obs/trace.py); the default is
+        # the shared no-op
+        self.tracer = NULL_TRACER
         self._queue: deque[Request] = deque()
         self._seq = 0
         # arrival seqs for crash-relaunched requests: deeply negative
@@ -174,6 +179,13 @@ class FIFOScheduler:
                     if head.uid != self._blocked_uid:
                         self.rejections += 1
                         self._blocked_uid = head.uid
+                        if self.tracer.enabled:
+                            # once per DISTINCT blocked head, like the
+                            # counter — not once per blocked step
+                            self.tracer.event(
+                                "admit.blocked", uid=head.uid,
+                                free_pages=free_pages,
+                                need_pages=page_cost(trial))
                     break
             out.append(self._queue.popleft())
         return out

@@ -32,6 +32,7 @@ import math
 import numpy as np
 
 from repro.core.schedule import steps_since_refresh
+from repro.obs.trace import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -68,6 +69,7 @@ class AnomalyGuard:
         self._var = 0.0
         self._n = 0                    # healthy observations seen
         self.consecutive = 0
+        self.tracer = NULL_TRACER  # obs/trace.py; train_loop installs
         self.counters = {"anomaly_steps": 0, "skipped_steps": 0,
                          "spike_steps": 0, "rewinds": 0,
                          "steps_replayed": 0}
@@ -110,6 +112,10 @@ class AnomalyGuard:
         if verdict != "ok":
             self.counters["anomaly_steps"] += 1
             self.consecutive += 1
+            if self.tracer.enabled:
+                self.tracer.event("train.anomaly", step=step,
+                                  verdict=verdict, loss=loss,
+                                  consecutive=self.consecutive)
             if self.consecutive >= c.max_consecutive:
                 return "rewind"
             return verdict

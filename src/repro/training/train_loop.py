@@ -37,6 +37,8 @@ import jax
 import numpy as np
 
 from repro.checkpointing.checkpoint import Checkpointer
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import NULL_TRACER
 from repro.optim import adamw
 from repro.training import step as step_mod
 from repro.training.faults import TrainingDivergedError
@@ -59,14 +61,26 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
           dist=None, state=None, jit_kwargs: dict | None = None,
           log_fn: Callable[[dict], None] | None = None,
           teacher_params=None, teacher_cfg=None, kd_beta: float = 0.0,
-          faults=None):
+          faults=None, tracer=None, metrics=None):
     """Returns (final_state, history list of metric dicts).
 
     ``faults`` is an optional ``training/faults.py`` TrainFaultPlan —
     the chaos-test injection port. History entries are either step
     metrics (every ``log_every`` steps and the final step — the LAST
     entry is always the final step's metrics) or structured events
-    (``{"event": "straggler" | "rewind" | ...}``)."""
+    (``{"event": "straggler" | "rewind" | ...}``).
+
+    ``tracer`` (obs/trace.py) records ``train.step`` spans at the
+    step's EXISTING host sync and routes every structured event
+    through the same schema serving uses; the checkpoint/rewind paths
+    dump flight-recorder postmortems through it. ``metrics`` injects a
+    ``MetricsRegistry`` so a caller can scrape the loop's counters
+    (Prometheus/snapshot); by default a private one backs ``counters``
+    — either way reset/snapshot derive from the registry, never from a
+    hand-kept list."""
+    tr = NULL_TRACER if tracer is None else tracer
+    reg = metrics if metrics is not None else MetricsRegistry(
+        namespace="blast_train")
     gcfg = loop.guard if (loop.guard and loop.guard.enabled) else None
     train_step = step_mod.make_train_step(
         cfg, opt_cfg, dist=dist, kd_beta=kd_beta,
@@ -81,8 +95,10 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
 
     ckpt = Checkpointer(loop.ckpt_dir, keep=loop.keep) \
         if loop.ckpt_dir else None
-    if ckpt is not None and faults is not None:
-        ckpt.fault_hook = faults.on_ckpt_saved
+    if ckpt is not None:
+        ckpt.tracer = tr
+        if faults is not None:
+            ckpt.fault_hook = faults.on_ckpt_saved
     start = 0
     if ckpt and ckpt.latest_intact_step() is not None:
         state = ckpt.restore_state(state)
@@ -92,9 +108,18 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
     guard = AnomalyGuard(
         gcfg, step_size=(cfg.blast.step_size if cfg.blast.enabled
                          else 0)) if gcfg else None
-    counters = {"straggler_steps": 0, "ckpt_fallbacks": 0,
-                "anomaly_steps": 0, "skipped_steps": 0,
-                "spike_steps": 0, "rewinds": 0, "steps_replayed": 0}
+    if guard is not None:
+        guard.tracer = tr
+    for name, help_ in (
+            ("straggler_steps", "steps slower than factor x median"),
+            ("ckpt_fallbacks", "corrupt/torn checkpoints skipped"),
+            ("anomaly_steps", "steps with any anomaly verdict"),
+            ("skipped_steps", "device-skipped (non-finite/grad) steps"),
+            ("spike_steps", "host loss-spike verdicts"),
+            ("rewinds", "automatic checkpoint rewinds"),
+            ("steps_replayed", "steps re-run after rewinds")):
+        reg.counter(name, help_)
+    counters = reg.view()
 
     stop = {"flag": False}
 
@@ -113,6 +138,12 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
 
     def emit(event: dict):
         history.append(event)
+        if tr.enabled:
+            # one schema for log_fn/history AND the tracer: the span
+            # stream carries the same straggler/rewind/anomaly events
+            # the structured log does, namespaced under train.*
+            tr.event("train." + event["event"],
+                     **{k: v for k, v in event.items() if k != "event"})
         if log_fn:
             log_fn(event)
         else:
@@ -143,6 +174,11 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
 
             loss = float(np.asarray(metrics["loss"]))
             device_anomaly = bool(np.asarray(metrics["anomaly"]))
+            if tr.enabled:
+                # attached at the step's EXISTING host sync (the
+                # block_until_ready above) — no extra device round-trip
+                tr.span_at("train.step", t0, t0 + dt, step=i,
+                           loss=loss, anomaly=device_anomaly)
             if guard is not None:
                 verdict = guard.observe(i, loss, device_anomaly)
                 counters.update(guard.counters)
@@ -151,6 +187,12 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
                     if (target is not None
                             and guard.counters["rewinds"]
                             < gcfg.max_rewinds):
+                        # freeze the flight recorder FIRST: the rewind
+                        # restores older state, so the recent-span ring
+                        # is the only record of the anomalous run-up
+                        tr.postmortem("train_rewind", step=i,
+                                      consecutive=guard.consecutive,
+                                      rewinds=guard.counters["rewinds"])
                         state = ckpt.restore_state(state)
                         counters["ckpt_fallbacks"] = ckpt.fallbacks
                         new_i = int(np.asarray(state.step))
@@ -162,6 +204,10 @@ def train(cfg, opt_cfg: adamw.AdamWConfig, source, loop: TrainLoopConfig,
                         i = new_i
                         continue
                     if ckpt is not None:
+                        tr.postmortem(
+                            "training_diverged", step=i,
+                            consecutive=guard.consecutive,
+                            rewinds=guard.counters["rewinds"])
                         raise TrainingDivergedError(
                             i, guard.consecutive,
                             guard.counters["rewinds"])

@@ -16,6 +16,7 @@ import pytest
 from conftest import tiny_cfg
 
 from repro.models import registry
+from repro.obs.trace import Tracer
 from repro.serving.engine import Engine
 from repro.serving.faults import (EngineCrashError, FaultPlan,
                                   LaneFaultError, RequestCancelledError)
@@ -217,9 +218,11 @@ def test_watchdog_recovers_hung_step(model):
     eng0, uids0 = make(None)
     base = _drain(eng0)
 
+    tr = Tracer()
+
     async def drive():
         eng = Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
-                     page_size=4,
+                     page_size=4, tracer=tr,
                      faults=FaultPlan().stall(2, seconds=30.0))
         # the deadline must be generous enough that a REAL (slow but
         # progressing) step never trips it — only the 30s stall does
@@ -239,6 +242,17 @@ def test_watchdog_recovers_hung_step(model):
     assert front.recovery_log[0]["salvaged_lanes"] >= 1
     assert front.recovery_log[0]["latency_s"] < 10.0
     assert _pool_consistent(eng) and eng.pool.referenced == 0
+    # the flight recorder dumped the hang: watchdog first, then the
+    # supervisor, each carrying the condemned step's victim timelines
+    reasons = [p["reason"] for p in tr.postmortems]
+    assert reasons[:2] == ["watchdog_hang", "supervisor_recover"]
+    pm = tr.postmortems[0]
+    assert pm["spans"], "empty flight-recorder ring at the crash"
+    pm_uids = {s["attrs"].get("uid") for s in pm["spans"]} | {
+        u for s in pm["spans"]
+        for u in (s["attrs"].get("uids") or ())}
+    hung = set(tr.postmortems[1]["meta"]["active_uids"])
+    assert hung and hung <= pm_uids
 
 
 @pytest.mark.slow
@@ -256,6 +270,8 @@ def test_chaos_parity_oracle(model):
     uids0 = [eng0.submit(p, 12) for p in prompts]
     base = _drain(eng0)
 
+    tr = Tracer()
+
     async def drive():
         # step 2: lane 1's logits poisoned (quarantine); step 4: the
         # stepper thread dies host-side (salvage both live lanes to
@@ -265,7 +281,7 @@ def test_chaos_parity_oracle(model):
                 .crash(4, device_lost=False)
                 .corrupt_offload(nth_save=0))
         eng = Engine(cfg, params, max_batch=2, max_len=48, slab_k=4,
-                     page_size=4, faults=plan)
+                     page_size=4, faults=plan, tracer=tr)
         # no stall in this plan: hang detection stays off (watchdog_s
         # None) and the monitor only has to recover the dead stepper
         front = AsyncEngine(eng, max_recoveries=2)
@@ -298,6 +314,20 @@ def test_chaos_parity_oracle(model):
     # free + referenced + cached_idle == n_pages after the dust settles
     assert _pool_consistent(eng) and eng.pool.referenced == 0
     assert len(eng._offload) == 0
+    # flight recorder: the stepper crash produced postmortems whose
+    # frozen ring holds EVERY victim's span timeline — the poisoned
+    # lane's quarantine landed before the crash, so it is in the dump
+    assert [p["reason"] for p in tr.postmortems][:2] == [
+        "watchdog_crash", "supervisor_recover"]
+    pm = tr.postmortems[0]
+    assert pm["spans"]
+    pm_uids = {s["attrs"].get("uid") for s in pm["spans"]} | {
+        u for s in pm["spans"]
+        for u in (s["attrs"].get("uids") or ())}
+    assert set(failed) <= pm_uids
+    quarantined = [s for s in pm["spans"]
+                   if s["name"] == "request.quarantined"]
+    assert quarantined and quarantined[0]["attrs"]["uid"] in failed
 
 
 # -------------------------------------------------- front-end satellites
