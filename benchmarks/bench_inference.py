@@ -910,6 +910,143 @@ def _check_obs_guarantees(obs) -> None:
     print("obs guarantees OK")
 
 
+def _swap_trace(cfg, packed_old, packed_new, art_dir, *, seed: int = 11,
+                new_tokens: int = 16):
+    """The measured hot-swap run: two streams admitted on the OLD
+    weights, a mid-decode ``swap_weights`` to the sealed artifact, two
+    more admitted post-flip — against two reference runs (pure-old and
+    pure-new) for the bitwise oracle. Returns everything
+    ``_check_swap_guarantees`` asserts on."""
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(1, cfg.vocab_size, size=(int(n),))
+               .astype(np.int32) for n in (6, 8, 5, 7)]
+
+    def reference(params):
+        eng = engine.Engine(cfg, params, max_batch=4, max_len=48,
+                            slab_k=4, page_size=8)
+        for p in prompts:
+            eng.submit(p, new_tokens)
+        out = {}
+        while (len(eng.scheduler) or eng.active_lanes
+               or eng._preempted or eng._pending_results):
+            for r in eng.step():
+                out[r.uid] = r
+        return out
+
+    base_old = reference(packed_old)
+    base_new = reference(packed_new)
+
+    eng = engine.Engine(cfg, packed_old, max_batch=4, max_len=48,
+                        slab_k=4, page_size=8)
+    out, step, rep = {}, 0, None
+    tok_at_flip = tok_at_commit = None
+    for p in prompts[:2]:
+        eng.submit(p, new_tokens)
+    t0 = time.monotonic()
+    while (len(eng.scheduler) or eng.active_lanes or eng._preempted
+           or eng._pending_results or step < 2):
+        if step == 1:
+            rep = eng.swap_weights(art_dir, monitor_steps=4)
+            tok_at_flip = eng.stats["generated_tokens"]
+            for p in prompts[2:]:
+                eng.submit(p, new_tokens)
+        for r in eng.step():
+            out[r.uid] = r
+        if (rep is not None and tok_at_commit is None
+                and eng._swap_monitor is None):
+            tok_at_commit = eng.stats["generated_tokens"]
+        step += 1
+    elapsed = time.monotonic() - t0
+    if tok_at_commit is None:   # window outlived the workload
+        while eng._swap_monitor is not None:
+            eng.step()
+        tok_at_commit = eng.stats["generated_tokens"]
+    return {"eng": eng, "rep": rep, "out": out, "elapsed_s": elapsed,
+            "base_old": base_old, "base_new": base_new,
+            "n_req": len(prompts),
+            "tokens_during_window": tok_at_commit - tok_at_flip}
+
+
+def _swap_sweep(cfg, label: str, params, *, results: list):
+    """--swap-only rows for ``BENCH_swap.json``: swap latency split
+    (stage / canary / flip), canary cost in tokens and seconds, tokens
+    served inside the monitoring window, and the dropped-request count
+    (must be 0). The sealed artifact is built in a temp dir from a
+    SECOND weight init so old and new generations genuinely differ."""
+    import shutil
+    import tempfile
+    from repro.serving import artifact
+
+    packed_new = _pack(cfg, registry.init_params(
+        cfg, jax.random.PRNGKey(7)))
+    d = tempfile.mkdtemp(prefix="blast_swap_bench_")
+    art_dir = f"{d}/artifact"
+    try:
+        manifest = artifact.seal(cfg, packed_new, art_dir)
+        tr = _swap_trace(cfg, params, packed_new, art_dir)
+        eng, rep, out = tr["eng"], tr["rep"], tr["out"]
+        dropped = (tr["n_req"] - len(out)
+                   + sum(r.error is not None for r in out.values()))
+        row(f"engine_{label}_swap_flip", rep.flip_s * 1e6,
+            f"stage_ms={rep.stage_s * 1e3:.1f} "
+            f"canary_ms={rep.canary_s * 1e3:.1f} "
+            f"state={rep.state} dropped={dropped}")
+        results.append({
+            "name": f"engine_{label}_swap",
+            "state": rep.state,
+            "stage_s": rep.stage_s,
+            "canary_s": rep.canary_s,
+            "flip_s": rep.flip_s,
+            "swap_total_s": rep.stage_s + rep.canary_s + rep.flip_s,
+            "canary_tokens": eng.stats["swap_canary_tokens"],
+            "canary_s_per_token": rep.canary_s / max(
+                eng.stats["swap_canary_tokens"], 1),
+            "n_canaries": len(manifest["canaries"]),
+            "monitor_steps": rep.monitor_steps,
+            "tokens_during_window": tr["tokens_during_window"],
+            "requests": tr["n_req"],
+            "dropped_requests": dropped,
+            "quarantines": rep.quarantines,
+            "weight_generations_held":
+                eng.stats["weight_generations_held"],
+            "elapsed_s": tr["elapsed_s"],
+        })
+        return tr
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def _check_swap_guarantees(tr) -> None:
+    """--swap-only hard asserts, on the SAME trace the row was measured
+    from: the swap commits, ZERO requests drop, old-generation streams
+    are bitwise-identical to the no-swap reference, post-flip
+    admissions to the pure-new-weights reference, the canaries actually
+    cost tokens, and the old weights were freed once their last lane
+    retired."""
+    eng, rep, out = tr["eng"], tr["rep"], tr["out"]
+    assert rep.state == "COMMITTED", rep.state
+    assert sorted(out) == list(range(tr["n_req"])), sorted(out)
+    assert all(r.error is None for r in out.values())
+    for u in (0, 1):
+        assert (out[u].generated.tolist()
+                == tr["base_old"][u].generated.tolist()), u
+    for u in (2, 3):
+        assert (out[u].generated.tolist()
+                == tr["base_new"][u].generated.tolist()), u
+    assert eng.stats["weight_swaps"] == 1
+    assert eng.stats["swap_rollbacks"] == 0
+    assert eng.stats["swap_canary_tokens"] > 0
+    assert tr["tokens_during_window"] > 0, \
+        "no tokens served inside the monitoring window"
+    assert eng.stats["weight_generations_held"] == 1
+    print("# swap suite OK: "
+          f"stage_ms={rep.stage_s * 1e3:.1f} "
+          f"canary_ms={rep.canary_s * 1e3:.1f} "
+          f"flip_ms={rep.flip_s * 1e3:.1f} "
+          f"tokens_during_window={tr['tokens_during_window']} "
+          f"dropped=0")
+
+
 def _check_chaos_guarantees(chaos, wd, shed) -> None:
     """--chaos-only hard asserts (acceptance criteria), on the SAME
     traces the rows were measured from: (a) the chaos parity oracle —
@@ -1081,20 +1218,31 @@ def _check_paged_guarantees(cfg, params) -> None:
 def main(smoke: bool = False, out: str = "BENCH_serving.json",
          mixed_only: bool = False, frontdoor_only: bool = False,
          chaos_only: bool = False, obs_only: bool = False,
+         swap_only: bool = False,
          trace_out: str = "BENCH_obs_trace.json",
          postmortem_out: str = "BENCH_obs_postmortem.json"):
     results: list[dict] = []
     check = None
     chaos_payload = None
     obs_payload = None
-    if smoke or mixed_only or frontdoor_only or chaos_only or obs_only:
+    swap_payload = None
+    if (smoke or mixed_only or frontdoor_only or chaos_only or obs_only
+            or swap_only):
         # tiny config through the REAL dispatch path: decode slabs,
         # per-lane frontiers, paged pool, packed XLA-backend kernels
         cfg = bench_cfg(num_layers=1, d_model=64, d_ff=128,
                         vocab_size=128, num_heads=2, num_kv_heads=2)
         params = registry.init_params(cfg, jax.random.PRNGKey(0))
         check = (cfg, params)
-        if chaos_only:
+        if swap_only:
+            # sparse packed weights: the swap moves REAL artifacts
+            # (packed BCSC leaves, canaries, checksums), not toys
+            scfg = replace_blast(cfg, s_init=0.7, s_max=0.7)
+            packed = _pack(scfg, registry.init_params(
+                scfg, jax.random.PRNGKey(0)))
+            swap_payload = _swap_sweep(scfg, "packed_s70", packed,
+                                       results=results)
+        elif chaos_only:
             chaos_payload = _chaos_sweep(cfg, "dense", params,
                                          results=results)
         elif obs_only:
@@ -1124,7 +1272,7 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
             _frontdoor_sweep(cfg, "dense", params, sparsity=0.0,
                              results=results, n_batch=4, n_inter=3,
                              batch_budget=13)
-        if not (frontdoor_only or chaos_only or obs_only):
+        if not (frontdoor_only or chaos_only or obs_only or swap_only):
             _mixed_sweep(cfg, "dense", params, sparsity=0.0,
                          results=results, n_req=6, max_batch=2,
                          new_tokens=9, prefill_chunk=4, reps=2)
@@ -1176,14 +1324,18 @@ def main(smoke: bool = False, out: str = "BENCH_serving.json",
 
     write_bench_artifact(
         out,
-        "chaos" if chaos_only else "obs" if obs_only else "serving",
+        "swap" if swap_only else "chaos" if chaos_only
+        else "obs" if obs_only else "serving",
         results,
         smoke=(smoke or mixed_only or frontdoor_only or chaos_only
-               or obs_only))
+               or obs_only or swap_only))
     if check is not None:
         # hard asserts AFTER the artifact lands on disk, so the CI
         # upload preserves the measured rows even when parity breaks —
         # exactly the runs where the trajectory matters most
+        if swap_only:
+            _check_swap_guarantees(swap_payload)
+            return
         if chaos_only:
             _check_chaos_guarantees(*chaos_payload)
             return
@@ -1226,6 +1378,11 @@ if __name__ == "__main__":
                          "untraced bitwise parity, Prometheus round-"
                          "trip, Perfetto export + crash postmortem "
                          "artifacts (CI obs-smoke job)")
+    ap.add_argument("--swap-only", action="store_true",
+                    help="just the hot-swap suite: seal a second-init "
+                         "artifact, swap mid-decode, assert the "
+                         "bitwise zero-drop oracle, writing "
+                         "BENCH_swap.json (CI swap-smoke job)")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--trace-out", default="BENCH_obs_trace.json",
                     help="Perfetto/Chrome trace artifact (--obs-only)")
@@ -1235,5 +1392,6 @@ if __name__ == "__main__":
     args = ap.parse_args()
     main(smoke=args.smoke, out=args.out, mixed_only=args.mixed_only,
          frontdoor_only=args.frontdoor_only, chaos_only=args.chaos_only,
-         obs_only=args.obs_only, trace_out=args.trace_out,
+         obs_only=args.obs_only, swap_only=args.swap_only,
+         trace_out=args.trace_out,
          postmortem_out=args.postmortem_out)

@@ -107,6 +107,16 @@ def main():
                     help="serve the packed model through the asyncio "
                          "front door (SLA classes + preemption with "
                          "host KV offload) and print per-class TTFT")
+    ap.add_argument("--seal", default=None, metavar="DIR",
+                    help="seal the packed weights into DIR as a "
+                         "validated artifact (checksums + config "
+                         "fingerprint + golden canaries), then exit")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="serve from a sealed artifact instead of "
+                         "packing fresh — fully validated (canaries "
+                         "replayed) before serving; corrupt exits 2")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="with --artifact: verify and exit")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -123,13 +133,38 @@ def main():
             fn = jax.vmap(fn)
         masks[path] = fn(w)
 
+    if args.seal:
+        from repro.serving import artifact as art
+        packed = export.pack_params(cfg, params, masks,
+                                    dtype=jnp.float32)
+        manifest = art.seal(cfg, packed, args.seal)
+        print(f"sealed {args.seal}: {len(manifest['checksums'])} "
+              f"arrays, {len(manifest['canaries'])} canaries, "
+              f"fingerprint {manifest['fingerprint'][:12]}…")
+        return
+
+    art_params = None
+    if args.artifact:
+        from repro.serving import artifact as art
+        try:
+            art_params, manifest = art.load(args.artifact, cfg,
+                                            run_canaries=True)
+        except art.ArtifactError as e:
+            print(f"artifact INVALID ({type(e).__name__}): {e}")
+            raise SystemExit(2)
+        print(f"artifact OK: {len(manifest['checksums'])} arrays, "
+              f"{len(manifest.get('canaries', []))} canaries replayed")
+        if args.validate_only:
+            return
+
     if args.frontdoor:
         if not registry.supports_prefill_chunk(cfg):
             raise SystemExit(
                 f"--frontdoor needs an engine-servable family; "
                 f"{cfg.family!r} is not")
-        packed = export.pack_params(cfg, params, masks,
-                                    dtype=jnp.float32)
+        packed = (art_params if art_params is not None else
+                  export.pack_params(cfg, params, masks,
+                                     dtype=jnp.float32))
         frontdoor(cfg, packed, args)
         return
 
@@ -160,6 +195,12 @@ def main():
                                        max_new_tokens=args.new_tokens,
                                        **kw)
 
+    if art_params is not None:
+        t2, s2 = run(art_params)
+        mp = export.memory_report(cfg, art_params)
+        print(f"artifact: {s2['tok_per_s']:.1f} tok/s, "
+              f"{mp['bytes']:,} B (validated weights)")
+        return
     dense = export.prune_params(cfg, params, {}, dtype=jnp.float32)
     t1, s1 = run(dense)
     packed = export.pack_params(cfg, params, masks, dtype=jnp.float32)

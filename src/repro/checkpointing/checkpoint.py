@@ -43,20 +43,22 @@ from repro.obs.trace import NULL_TRACER
 from repro.training.faults import CheckpointCorruptionError
 
 
-def _flatten(tree, prefix=""):
+def flatten_tree(tree, prefix=""):
+    """Nested dict/list tree -> flat ``{"a/b/0": leaf}`` dict. Shared
+    with serving/artifact.py, which layers packed-leaf handling on top."""
     out = {}
     if isinstance(tree, dict):
         for k, v in tree.items():
-            out.update(_flatten(v, f"{prefix}{k}/"))
+            out.update(flatten_tree(v, f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
         for i, v in enumerate(tree):
-            out.update(_flatten(v, f"{prefix}{i}/"))
+            out.update(flatten_tree(v, f"{prefix}{i}/"))
     else:
         out[prefix.rstrip("/")] = tree
     return out
 
 
-def _unflatten_into(template, flat):
+def unflatten_tree(template, flat):
     def rec(node, prefix):
         if isinstance(node, dict):
             return {k: rec(v, f"{prefix}{k}/") for k, v in node.items()}
@@ -67,8 +69,16 @@ def _unflatten_into(template, flat):
     return rec(template, "")
 
 
-def _crc(a: np.ndarray) -> int:
+def crc32_array(a: np.ndarray) -> int:
+    """The integrity primitive shared by checkpoints (restore-time
+    verify), the host KV offload store, and sealed serving artifacts."""
     return zlib.crc32(np.ascontiguousarray(a).tobytes())
+
+
+# module-internal aliases, kept for existing callers
+_flatten = flatten_tree
+_unflatten_into = unflatten_tree
+_crc = crc32_array
 
 
 class Checkpointer:

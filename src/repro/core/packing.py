@@ -146,6 +146,78 @@ def pad_nnz(p: PackedBCSC, nnz: int) -> PackedBCSC:
                       idx=jnp.pad(p.idx, pad_i), kb=p.kb)
 
 
+def pad_fraction(block_mask, nnz: int | None = None) -> float:
+    """Fraction of packed block slots that are zero padding under an
+    UNBALANCED mask: columns with fewer kept blocks than the max are
+    padded up to ``nnz`` (idx 0, zero values). 0.0 for a balanced mask.
+    The padding is numerically exact but inflates ``storage_bytes`` /
+    ``memory_report`` — export warns on it and the artifact manifest
+    records it (serving/artifact.py)."""
+    import numpy as np
+    m = np.asarray(jax.device_get(block_mask))
+    counts = m.sum(axis=-2)
+    if nnz is None:
+        nnz = int(counts.max())
+    total = nnz * counts.size
+    return float((total - counts.sum()) / total) if total else 0.0
+
+
+def structure_violations(p: PackedBCSC, b_in: int | None = None,
+                         b_out: int | None = None,
+                         dense_shape: tuple | None = None) -> list[str]:
+    """Static structural invariants of a PackedBCSC, checked on host
+    arrays; returns human-readable violation strings (empty = sound).
+    The artifact layer (serving/artifact.py) maps these onto typed
+    errors BEFORE a single token is served:
+
+      * shape consistency between ``blocks`` and ``idx`` (and, when
+        given, against the registry's expected block dims and dense
+        leaf shape);
+      * every ``idx`` entry in ``[0, kb)`` — an out-of-range entry
+        makes the BSpMM gather garbage blocks silently;
+      * per-column duplicate ``idx`` entries may only carry ZERO blocks
+        (the zero-padding convention): a duplicate with data would
+        double-count that block-row in the contraction.
+    """
+    import numpy as np
+    out: list[str] = []
+    blocks = np.asarray(jax.device_get(p.blocks))
+    idx = np.asarray(jax.device_get(p.idx))
+    if idx.dtype != np.int32:
+        out.append(f"idx dtype {idx.dtype}, expected int32")
+    if blocks.ndim != idx.ndim + 2 or blocks.shape[:-2] != idx.shape:
+        return out + [f"blocks shape {blocks.shape} inconsistent with "
+                      f"idx shape {idx.shape}"]
+    if b_in is not None and (p.b_in, p.b_out) != (b_in, b_out):
+        out.append(f"block dims ({p.b_in}, {p.b_out}) != configured "
+                   f"({b_in}, {b_out})")
+    if dense_shape is not None:
+        got = blocks.shape[:-4] + p.dense_shape()
+        if tuple(got) != tuple(dense_shape):
+            out.append(f"dense extent {got} != expected "
+                       f"{tuple(dense_shape)}")
+    if idx.size and (idx.min() < 0 or idx.max() >= p.kb):
+        out.append(f"idx out of range [0, {p.kb}): "
+                   f"min {int(idx.min())}, max {int(idx.max())}")
+        return out       # duplicate analysis is meaningless past this
+    nnz = idx.shape[-1]
+    cols_i = idx.reshape(-1, nnz)
+    cols_b = blocks.reshape(-1, nnz, p.b_in * p.b_out)
+    nz = np.any(cols_b != 0, axis=-1)                    # (C, nnz)
+    order = np.argsort(cols_i, axis=1, kind="stable")
+    si = np.take_along_axis(cols_i, order, axis=1)
+    sz = np.take_along_axis(nz, order, axis=1)
+    dup = si[:, 1:] == si[:, :-1]
+    bad = dup & sz[:, 1:] & sz[:, :-1]
+    if bad.any():
+        c = int(np.argwhere(bad.any(axis=1))[0, 0])
+        out.append(f"duplicate idx entries with nonzero blocks in "
+                   f"{int(bad.any(axis=1).sum())} column(s) "
+                   f"(first: flat column {c}) — block-rows would be "
+                   "double-counted")
+    return out
+
+
 def storage_bytes(p: PackedBCSC) -> int:
     """HBM bytes of the packed representation (paper Fig. 7 analogue)."""
     return (p.blocks.size * p.blocks.dtype.itemsize

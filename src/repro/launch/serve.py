@@ -101,6 +101,22 @@ def main():
                     help="record request spans (obs/trace.py) and "
                          "write a Chrome/Perfetto trace JSON here — "
                          "open in https://ui.perfetto.dev")
+    ap.add_argument("--artifact", default=None, metavar="DIR",
+                    help="serve from a SEALED artifact "
+                         "(serving/artifact.py): every layer is "
+                         "verified — checksums, config fingerprint, "
+                         "packed structure, golden canaries — before a "
+                         "single token is served; a corrupt artifact "
+                         "exits non-zero with the typed error")
+    ap.add_argument("--validate-only", action="store_true",
+                    help="with --artifact: verify and exit (exit code "
+                         "2 + typed error on any corruption)")
+    ap.add_argument("--seal", default=None, metavar="DIR",
+                    help="pack (requires --packed) and seal the "
+                         "serving weights into DIR as a validated "
+                         "artifact — config fingerprint, per-array "
+                         "crc32s, golden canary generations — then "
+                         "exit")
     args = ap.parse_args()
 
     from repro.configs import get_config
@@ -110,6 +126,26 @@ def main():
     from repro.training import step as ts
 
     cfg = get_config(args.arch, smoke=args.smoke)
+
+    if args.validate_only and not args.artifact:
+        raise SystemExit("--validate-only requires --artifact")
+    if args.artifact:
+        from repro.serving import artifact as art
+        try:
+            params, manifest = art.load(args.artifact, cfg,
+                                        run_canaries=True)
+        except art.ArtifactError as e:
+            print(f"artifact INVALID ({type(e).__name__}): {e}")
+            raise SystemExit(2)
+        print(f"artifact OK: fingerprint "
+              f"{manifest['fingerprint'][:12]}…, "
+              f"{len(manifest['checksums'])} arrays, "
+              f"{len(manifest.get('canaries', []))} canaries replayed")
+        if args.validate_only:
+            return
+        _serve(cfg, params, args)
+        return
+
     state = ts.init_state(cfg, jax.random.PRNGKey(0))
     if args.ckpt_dir:
         from repro.checkpointing.checkpoint import Checkpointer
@@ -132,10 +168,32 @@ def main():
             masks[path] = fn(w)
         state = dataclasses.replace(state, masks=masks)
 
-    params = (export.pack_params(cfg, state.params, state.masks)
+    pad_report: dict = {}
+    params = (export.pack_params(cfg, state.params, state.masks,
+                                 pad_report=pad_report)
               if args.packed else
               export.prune_params(cfg, state.params, state.masks))
     print("serving memory:", export.memory_report(cfg, params))
+
+    if args.seal:
+        from repro.serving import artifact as art
+        if not args.packed:
+            raise SystemExit("--seal requires --packed (artifacts hold "
+                             "packed serving params)")
+        manifest = art.seal(cfg, params, args.seal,
+                            pad=pad_report or None)
+        print(f"sealed {args.seal}: fingerprint "
+              f"{manifest['fingerprint'][:12]}…, "
+              f"{len(manifest['checksums'])} arrays, "
+              f"{len(manifest['canaries'])} canaries")
+        return
+
+    _serve(cfg, params, args)
+
+
+def _serve(cfg, params, args):
+    from repro.models import registry
+    from repro.serving import engine, serve_loop
 
     rng = np.random.default_rng(0)
     tracer = None

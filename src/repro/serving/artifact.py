@@ -1,0 +1,415 @@
+"""Sealed serving artifacts: the validated train->serve weight boundary.
+
+BLaST's prune-grow schedule emits a sequence of ever-sparser packed
+snapshots (core/prune_grow.py -> export.pack_params); the paper's
+deployment story (§5.2, Fig. 7) assumes they reach serving INTACT. A
+``PackedBCSC`` is exactly where silent corruption is cheapest to catch
+statically — an out-of-range ``idx`` entry gathers garbage blocks and
+serves wrong tokens with no crash — so an artifact is sealed with three
+nested layers of evidence, verified in order on load:
+
+  1. **bytes**   — per-array crc32 manifest (the same primitive as
+     checkpoint restore, ``checkpointing.crc32_array``) plus an exact
+     array-set match: bit rot, torn writes and dropped leaves fail here;
+  2. **structure** — config fingerprint, and for every packed leaf the
+     static invariants (``core/packing.structure_violations``): idx
+     dtype/range, block dims vs the registry config, dense extent,
+     the duplicate-idx zero rule, finiteness of every float leaf, and
+     the ``joint`` gate/up promise (identical idx tables). A RE-SIGNED
+     corruption (attacker/toolchain bug recomputes the checksums) still
+     fails here;
+  3. **behaviour** — golden canary generations: at seal time a handful
+     of prompts run greedy decode through ``canary_run`` and the tokens
+     + final-step logits are stored. ``verify_canaries`` re-runs the
+     SAME function on the loaded weights — an intact artifact reproduces
+     the goldens BITWISE (same jitted decode path), so the default gates
+     are zero token mismatches and 0.0 logit drift. A corruption that
+     preserves structure (a scaled block, re-signed) fails only here —
+     which is why the hot-swap (serving/hotswap.py) runs canaries
+     against the live engine config before flipping generations.
+
+Every failure raises a typed ``ArtifactError`` BEFORE a single token is
+served; serving/faults.py seeds one injector per corruption class and
+tests/test_artifact.py proves each is caught at its intended layer.
+
+Layout on disk (atomic: written to ``<dir>.tmp`` then renamed in)::
+
+    <dir>/arrays.npz     params (packed leaves split into <path>/blocks
+                         + <path>/idx; bf16 stored as uint16 views) and
+                         canary goldens (__canary__/<i>/{tokens,logits})
+    <dir>/manifest.json  format, config fingerprint, checksums, packed
+                         leaf metadata {kb, joint}, dtypes, pad
+                         fractions, canary prompts + a JSON copy of the
+                         golden tokens (cross-checked against the npz
+                         copy, so editing either one is caught)
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing.checkpoint import crc32_array, flatten_tree
+from repro.core import packing, sparse_mlp as sm
+from repro.core.packing import PackedBCSC
+from repro.models import registry
+from repro.serving.faults import ServingFault
+
+FORMAT = "blast-artifact-v1"
+
+
+# ------------------------------------------------------------- errors
+class ArtifactError(ServingFault):
+    """Base: a sealed artifact failed verification (or could not be
+    read). Raised before any engine step consumes the weights."""
+
+
+class ArtifactIOError(ArtifactError):
+    """Missing/unreadable/unparseable artifact files."""
+
+
+class ArtifactChecksumError(ArtifactError):
+    """Byte-integrity layer: crc32 mismatch, array set drift, or the
+    manifest's canary-token copy diverging from the npz copy."""
+
+
+class ArtifactConfigError(ArtifactError):
+    """The artifact was sealed for a different model config."""
+
+
+class ArtifactStructureError(ArtifactError):
+    """A packed leaf violates a static structural invariant (idx range,
+    block dims, dense extent, duplicate rule, joint promise)."""
+
+
+class ArtifactNonFiniteError(ArtifactError):
+    """A float leaf contains NaN/Inf."""
+
+
+class ArtifactCanaryError(ArtifactError):
+    """The loaded weights no longer reproduce the golden canary
+    generations within the gates (token mismatches / logit drift)."""
+
+
+# -------------------------------------------------------- fingerprint
+def fingerprint(cfg) -> str:
+    """Stable digest of the model config an artifact was sealed for."""
+    blob = json.dumps(dataclasses.asdict(cfg), sort_keys=True,
+                      default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# ---------------------------------------------------- flatten helpers
+def _flatten_params(params):
+    """Params tree -> (flat host arrays, packed-leaf metadata). Builds
+    on ``checkpointing.flatten_tree`` (which treats a PackedBCSC as an
+    opaque leaf) by splitting each packed leaf into ``<path>/blocks`` +
+    ``<path>/idx`` and recording its static metadata."""
+    arrays, packed = {}, {}
+    for k, v in flatten_tree(params).items():
+        if isinstance(v, PackedBCSC):
+            arrays[f"{k}/blocks"] = np.asarray(jax.device_get(v.blocks))
+            arrays[f"{k}/idx"] = np.asarray(jax.device_get(v.idx))
+            packed[k] = {"kb": int(v.kb), "joint": bool(v.joint)}
+        else:
+            arrays[k] = np.asarray(jax.device_get(v))
+    return arrays, packed
+
+
+def _unflatten_params(arrays: dict, packed: dict):
+    """Rebuild the nested params dict from flat arrays + packed meta
+    (registry params trees are pure nested dicts)."""
+    leaves: dict = {}
+    for path, meta in packed.items():
+        leaves[path] = PackedBCSC(
+            blocks=jnp.asarray(arrays[f"{path}/blocks"]),
+            idx=jnp.asarray(arrays[f"{path}/idx"]),
+            kb=int(meta["kb"]), joint=bool(meta["joint"]))
+    for k, v in arrays.items():
+        if k.startswith("__canary__/"):
+            continue
+        base, leaf = k.rsplit("/", 1) if "/" in k else ("", k)
+        if leaf in ("blocks", "idx") and base in packed:
+            continue
+        leaves[k] = jnp.asarray(v)
+    tree: dict = {}
+    for path, v in leaves.items():
+        node = tree
+        parts = path.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+def _store(arr: np.ndarray):
+    """npz-safe encoding: ml_dtypes (bfloat16 etc.) stored as uint16
+    views with the true dtype recorded for restore."""
+    if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+        return arr.view(np.uint16), str(arr.dtype)
+    return arr, str(arr.dtype)
+
+
+def _restore(arr: np.ndarray, dtype: str):
+    if str(arr.dtype) == dtype:
+        return arr
+    if dtype == "bfloat16":
+        return arr.view(jnp.bfloat16)
+    return arr.view(np.dtype(dtype))
+
+
+# -------------------------------------------------------------- canary
+def default_canary_prompts(cfg, n_prompts: int = 2,
+                           prompt_len: int = 8) -> list[list[int]]:
+    """Deterministic pseudo-prompts spread over the vocab (no RNG: the
+    same cfg always yields the same canary set)."""
+    v = cfg.vocab_size
+    return [[(7 * (i + 1) * (j + 3) + 11 * i + 5) % v
+             for j in range(prompt_len)] for i in range(n_prompts)]
+
+
+def canary_run(cfg, params, prompt, n_tokens: int, dist=None):
+    """THE canonical canary generation: greedy token-by-token decode of
+    one prompt through the repo's oracle serving path (serve_loop's
+    prefill + ``make_decode_step``). Called at seal time to produce the
+    goldens and again at load/swap time on the candidate weights — the
+    same function on intact weights is bitwise-reproducible, so the
+    default acceptance gates are exact (0 mismatches, 0.0 drift). The
+    engine's slab/mixed paths are bitwise-equal to this path (the
+    parity suite), so golden tokens also predict served tokens.
+
+    Returns (tokens (n_tokens,) int32, last-step logits (V,) f32)."""
+    from repro.serving.serve_loop import prefill_with_decode
+    from repro.serving.step import make_decode_step
+    prompts = jnp.asarray(np.asarray(prompt, np.int32)[None, :])
+    plen = prompts.shape[1]
+    last, cache = prefill_with_decode(cfg, params, prompts,
+                                      plen + n_tokens, dist)
+    decode = jax.jit(make_decode_step(cfg, dist=dist))
+    nxt = jnp.argmax(last, -1)[:, None].astype(jnp.int32)
+    toks = [int(nxt[0, 0])]
+    rng = jax.random.PRNGKey(0)
+    for i in range(n_tokens - 1):
+        nxt, cache, last, rng = decode(params, cache, nxt,
+                                       jnp.int32(plen + i), rng)
+        toks.append(int(nxt[0, 0]))
+    return (np.asarray(toks, np.int32),
+            np.asarray(jax.device_get(last), np.float32)[0])
+
+
+def verify_canaries(cfg, params, manifest: dict, golden_logits: dict,
+                    *, max_token_mismatches: int = 0,
+                    max_logit_drift: float = 0.0, dist=None) -> dict:
+    """Re-run every canary on ``params`` and gate against the goldens.
+
+    ``golden_logits`` maps canary index -> stored (V,) f32 final-step
+    logits (from the artifact npz). Returns a report dict; raises
+    ``ArtifactCanaryError`` when any canary exceeds the gates. The
+    defaults are EXACT gates — see ``canary_run``."""
+    report = {"canaries": [], "token_mismatches": 0, "logit_drift": 0.0}
+    for i, c in enumerate(manifest["canaries"]):
+        toks, logits = canary_run(cfg, params, c["prompt"],
+                                  len(c["tokens"]), dist=dist)
+        mism = int(np.sum(toks != np.asarray(c["tokens"], np.int32)))
+        drift = float(np.max(np.abs(logits - golden_logits[i]))) \
+            if i in golden_logits else 0.0
+        report["canaries"].append(
+            {"i": i, "token_mismatches": mism, "logit_drift": drift,
+             "tokens": toks.tolist()})
+        report["token_mismatches"] += mism
+        report["logit_drift"] = max(report["logit_drift"], drift)
+    if (report["token_mismatches"] > max_token_mismatches
+            or report["logit_drift"] > max_logit_drift):
+        raise ArtifactCanaryError(
+            f"canary gate failed: {report['token_mismatches']} token "
+            f"mismatch(es) (gate {max_token_mismatches}), max logit "
+            f"drift {report['logit_drift']:.3e} (gate "
+            f"{max_logit_drift:.3e}) — weights do not reproduce the "
+            "sealed goldens")
+    return report
+
+
+# ---------------------------------------------------------------- seal
+def seal(cfg, params, out_dir: str, *, canary_prompts=None,
+         canary_tokens: int = 8, pad: dict | None = None,
+         dist=None) -> dict:
+    """Seal packed serving params (``export.pack_params`` output) into
+    a validated artifact directory. Computes the config fingerprint,
+    per-array crc32s, and the golden canary generations on the EXACT
+    weights being sealed. ``pad`` is export's per-path pad-fraction
+    report (unbalanced masks), recorded for the memory accounting.
+    Returns the manifest. Atomic: assembled in ``<dir>.tmp`` and
+    renamed into place."""
+    arrays, packed = _flatten_params(params)
+    if canary_prompts is None:
+        canary_prompts = default_canary_prompts(cfg)
+    canaries = []
+    for i, prompt in enumerate(canary_prompts):
+        toks, logits = canary_run(cfg, params, prompt, canary_tokens,
+                                  dist=dist)
+        arrays[f"__canary__/{i}/tokens"] = toks
+        arrays[f"__canary__/{i}/logits"] = logits
+        canaries.append({"prompt": [int(t) for t in prompt],
+                         "tokens": toks.tolist()})
+    stored, dtypes = {}, {}
+    for k, v in arrays.items():
+        stored[k], dtypes[k] = _store(v)
+    manifest = {
+        "format": FORMAT,
+        "fingerprint": fingerprint(cfg),
+        "checksums": {k: crc32_array(v) for k, v in stored.items()},
+        "packed": packed,
+        "dtypes": dtypes,
+        "pad": {k: float(v) for k, v in (pad or {}).items()},
+        "canaries": canaries,
+    }
+    tmp, final = out_dir + ".tmp", out_dir
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    np.savez(os.path.join(tmp, "arrays.npz"), **stored)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return manifest
+
+
+# ------------------------------------------------------------ validate
+def _read(d: str):
+    mpath = os.path.join(d, "manifest.json")
+    apath = os.path.join(d, "arrays.npz")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except FileNotFoundError:
+        raise ArtifactIOError(f"no manifest.json in {d}") from None
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise ArtifactIOError(f"manifest.json unreadable: {e}") from None
+    if manifest.get("format") != FORMAT:
+        raise ArtifactIOError(
+            f"unknown artifact format {manifest.get('format')!r} "
+            f"(expected {FORMAT!r})")
+    try:
+        with np.load(apath) as z:
+            stored = {k: z[k] for k in z.files}
+    except FileNotFoundError:
+        raise ArtifactIOError(f"no arrays.npz in {d}") from None
+    except Exception as e:
+        raise ArtifactIOError(f"arrays.npz unreadable: {e}") from None
+    return manifest, stored
+
+
+def validate(d: str, cfg=None) -> dict:
+    """Verify an artifact directory layer by layer (bytes, then
+    structure/behavioural metadata) WITHOUT instantiating engine state.
+    With ``cfg``, also checks the config fingerprint and the packed
+    leaves' shapes against the registry. Raises a typed
+    ``ArtifactError``; returns the manifest on success."""
+    manifest, stored = _read(d)
+
+    # layer 1: bytes — exact array set, then per-array crc32
+    cks = manifest.get("checksums", {})
+    missing = sorted(set(cks) - set(stored))
+    extra = sorted(set(stored) - set(cks))
+    if missing or extra:
+        raise ArtifactChecksumError(
+            f"array set drift: missing {missing[:4]}, "
+            f"unmanifested {extra[:4]}")
+    for k in sorted(stored):
+        if crc32_array(stored[k]) != cks[k]:
+            raise ArtifactChecksumError(
+                f"crc32 mismatch on {k!r}: artifact bytes corrupt")
+
+    # canary cross-check: the manifest's JSON token copy vs the npz copy
+    for i, c in enumerate(manifest.get("canaries", [])):
+        npz_toks = stored.get(f"__canary__/{i}/tokens")
+        if npz_toks is None or not np.array_equal(
+                np.asarray(c["tokens"], np.int32), npz_toks):
+            raise ArtifactChecksumError(
+                f"canary {i} golden tokens diverge between manifest "
+                "and arrays (tampered goldens)")
+
+    # layer 2a: config fingerprint
+    if cfg is not None and manifest.get("fingerprint") != fingerprint(cfg):
+        raise ArtifactConfigError(
+            "artifact was sealed for a different config "
+            f"(fingerprint {manifest.get('fingerprint', '')[:12]}… != "
+            f"{fingerprint(cfg)[:12]}…)")
+
+    # decode true dtypes for the structural + finiteness layers
+    arrays = {k: _restore(v, manifest["dtypes"][k])
+              for k, v in stored.items()}
+
+    # layer 2b: structural invariants of every packed leaf
+    abs_tmpl = registry.abstract_params(cfg) if cfg is not None else None
+    for path, meta in manifest.get("packed", {}).items():
+        p = PackedBCSC(blocks=arrays[f"{path}/blocks"],
+                       idx=arrays[f"{path}/idx"],
+                       kb=int(meta["kb"]), joint=bool(meta["joint"]))
+        bi = bo = dense = None
+        if cfg is not None:
+            bi, bo = sm.block_dims_for(cfg.blast, path)
+            dense = sm.get_path(abs_tmpl, path).shape
+        bad = packing.structure_violations(p, bi, bo, dense)
+        if bad:
+            raise ArtifactStructureError(
+                f"packed leaf {path!r}: " + "; ".join(bad))
+        if meta.get("joint"):
+            leaf = path.split("/")[-1]
+            partner = path[:-len(leaf)] + (
+                leaf.replace("gate", "up") if "gate" in leaf
+                else leaf.replace("up", "gate"))
+            pidx = arrays.get(f"{partner}/idx")
+            if pidx is None or not np.array_equal(
+                    np.asarray(p.idx), np.asarray(pidx)):
+                raise ArtifactStructureError(
+                    f"joint promise broken: {path!r} marked joint but "
+                    f"its idx table differs from {partner!r} — the "
+                    "fused GLU kernel would contract the wrong blocks")
+
+    # layer 2c: finiteness of every float leaf (incl. canary logits)
+    for k, v in arrays.items():
+        if v.dtype.kind == "f" or str(v.dtype) == "bfloat16":
+            if not bool(np.isfinite(np.asarray(v, np.float32)).all()):
+                raise ArtifactNonFiniteError(
+                    f"non-finite values in {k!r}")
+    return manifest
+
+
+def load(d: str, cfg=None, *, run_canaries: bool = False, dist=None,
+         max_token_mismatches: int = 0, max_logit_drift: float = 0.0):
+    """Validate and load an artifact. Returns ``(params, manifest)``.
+    With ``run_canaries`` (requires ``cfg``), also replays the golden
+    generations on the loaded weights — the behavioural layer — before
+    returning."""
+    manifest = validate(d, cfg)
+    _, stored = _read(d)
+    arrays = {k: _restore(v, manifest["dtypes"][k])
+              for k, v in stored.items()}
+    params = _unflatten_params(arrays, manifest.get("packed", {}))
+    if run_canaries:
+        assert cfg is not None, "run_canaries needs the model config"
+        goldens = {i: np.asarray(stored[f"__canary__/{i}/logits"],
+                                 np.float32)
+                   for i in range(len(manifest.get("canaries", [])))}
+        verify_canaries(cfg, params, manifest, goldens,
+                        max_token_mismatches=max_token_mismatches,
+                        max_logit_drift=max_logit_drift, dist=dist)
+    return params, manifest
+
+
+def golden_logits(d: str, manifest: dict | None = None) -> dict:
+    """The stored final-step canary logits, keyed by canary index (for
+    ``verify_canaries`` callers that already hold loaded params)."""
+    manifest = manifest if manifest is not None else _read(d)[0]
+    _, stored = _read(d)
+    return {i: np.asarray(stored[f"__canary__/{i}/logits"], np.float32)
+            for i in range(len(manifest.get("canaries", [])))}

@@ -153,6 +153,10 @@ class _Lane:
     # host-sync timestamp of each generated token (TTFT / inter-token
     # latency observability; tokens folded at one sync share it)
     token_times: list[float] = dataclasses.field(default_factory=list)
+    # weight GENERATION the lane was admitted under (serving/hotswap.py):
+    # the lane decodes with exactly these params until it finishes, so a
+    # mid-stream hot-swap never changes an in-flight request's numerics
+    gen: int = 0
 
 
 @dataclasses.dataclass
@@ -175,6 +179,9 @@ class _Preempted:
     # crash-salvaged (serving/recovery.py) rather than preempted: its
     # restore counts toward recovered_zero_reprefill
     recovered: bool = False
+    # weight generation the lane decoded under; restore re-pins it so a
+    # hot-swap while the lane was frozen cannot change its numerics
+    gen: int = 0
 
 
 def _pow2_bucket(n: int, cap: int) -> int:
@@ -262,6 +269,19 @@ _METRICS = [
     ("counter", "deadline_cancelled", "cancelled by SLA deadline"),
     ("counter", "watchdog_hangs", "hung steps the watchdog condemned"),
     ("counter", "engine_crashes", "engine-thread crashes recovered"),
+    # weight hot-swap (serving/hotswap.py): swaps flipped, canary-gate
+    # rejections (no flip happened), automatic post-flip rollbacks,
+    # canary decode cost, and the generation bookkeeping gauges
+    ("counter", "weight_swaps", "weight hot-swaps flipped"),
+    ("counter", "swap_canary_failures", "swaps rejected by the canary "
+     "gate before flipping"),
+    ("counter", "swap_rollbacks", "flipped swaps rolled back"),
+    ("counter", "swap_canary_tokens", "tokens decoded by swap canaries"),
+    ("counter", "swap_quarantines",
+     "new-generation lanes quarantined inside a swap monitor window"),
+    ("gauge", "weight_generation", "current weight generation id"),
+    ("gauge", "weight_generations_held",
+     "distinct param generations held on device"),
     # per-request latency samples (monotonic clock): TTFT and
     # inter-token gaps, folded into p50/p95 by finalize_stats
     ("histogram", "ttft_s", "submit -> first token seconds"),
@@ -356,7 +376,19 @@ class Engine:
         # ``self.stats[...]`` read/write lands on a typed metric
         self.stats = self.metrics.view()
         self.cfg = cfg
+        self.dist = dist     # hotswap canaries rebuild decode with it
         self.params = params
+        # generational weights (serving/hotswap.py): ``_gen`` is the
+        # generation NEW admissions decode under, ``_gen_params`` every
+        # param set still referenced by some in-flight lane (old
+        # generations are freed by ``_gc_generations`` when their last
+        # lane retires), ``_gen_pins`` uid -> generation for crash
+        # relaunches that must resume on their admission-time weights,
+        # and ``_swap_monitor`` the post-flip rollback watcher
+        self._gen = 0
+        self._gen_params: dict[int, object] = {0: params}
+        self._gen_pins: dict[int, int] = {}
+        self._swap_monitor = None
         self.max_batch = max_batch
         self.max_len = max_len
         self.chunk = max(1, min(prefill_chunk, max_len))
@@ -696,8 +728,14 @@ class Engine:
         lane = self.lanes[i]
         self.lanes[i] = None
         self._mirror["live"][i] = False
+        self._gen_pins.pop(lane.req.uid, None)
         if self.paged and lane.pages:
-            if self.pcache is not None and lane.offset == 0:
+            # donation additionally requires CURRENT-generation KV: a
+            # hot-swap flushed the radix tree at flip, and an old-gen
+            # straggler finishing afterwards must not reseed it with
+            # KV computed under retired weights
+            if (self.pcache is not None and lane.offset == 0
+                    and lane.gen == self._gen):
                 # insert-on-finish: donate the pages covering every slot
                 # this lane actually wrote — prompt AND emitted
                 # continuation (slot s holds token seq[s]; offset 0 means
@@ -759,6 +797,13 @@ class Engine:
         stay bitwise-identical to a fault-free run."""
         lane = self.lanes[i]
         self.lanes[i] = None
+        self._gen_pins.pop(lane.req.uid, None)
+        if (self._swap_monitor is not None
+                and isinstance(exc, (LaneFaultError,
+                                     OffloadCorruptionError))):
+            # post-flip rollback evidence: quarantines of lanes on the
+            # freshly flipped generation (serving/hotswap.py)
+            self._swap_monitor.note_quarantine(lane.gen, self)
         m = self._mirror
         m["live"][i] = False
         m["faulted"][i] = False
@@ -823,12 +868,14 @@ class Engine:
             req = self.scheduler.remove(uid)
         if req is not None:
             self.stats["cancelled"] += 1
+            self._gen_pins.pop(uid, None)
             self._pending_results.append(
                 self._failed_result(req, [], RequestCancelledError(uid)))
             return True
         for j, pre in enumerate(self._preempted):
             if pre.req.uid == uid:
                 self._preempted.pop(j)
+                self._gen_pins.pop(uid, None)
                 self._offload.drop(uid)
                 if pre.pinned:
                     self.pool.release(list(pre.pinned.values()))
@@ -920,7 +967,7 @@ class Engine:
             token_times=lane.token_times, pending=int(m["pending"][i]),
             frontier=int(m["frontier"][i]),
             remaining=int(m["remaining"][i]), n_pages=len(lane.pages),
-            pinned=pinned))
+            pinned=pinned, gen=lane.gen))
         self.lanes[i] = None
         m["live"][i] = False
         m["bt"][i] = 0
@@ -976,7 +1023,8 @@ class Engine:
             if pre.recovered:
                 self.stats["recovered_zero_reprefill"] += 1
         self.lanes[i] = _Lane(pre.req, pre.offset, pre.generated,
-                              pages=pages, token_times=pre.token_times)
+                              pages=pages, token_times=pre.token_times,
+                              gen=pre.gen)
         m = self._mirror
         m["bt"][i] = 0
         m["bt"][i, :len(pages)] = pages
@@ -1102,55 +1150,69 @@ class Engine:
             reqs = self.scheduler.admit(len(free))
         if not reqs:
             return
-        # the admitted group prefills right-aligned in slots [0, W):
-        # a lane freed mid-traffic restarts at slot 0 immediately
-        width = max(r.prompt_len for r in reqs)
-        new_lanes = []
+        # partition by target weight generation: everything lands on the
+        # current weights except crash relaunches pinned to their
+        # admission-time generation (the common single-generation case
+        # is one group — the exact pre-swap code path)
+        groups: dict[int, list[Request]] = {}
+        for r in reqs:
+            groups.setdefault(self._gen_pins.get(r.uid, self._gen),
+                              []).append(r)
         m = self._mirror
+        built: list[tuple[int, int, list[int]]] = []   # (gen, W, lanes)
         try:
-            for r in reqs:
-                i = free.pop(0)
-                off = width - r.prompt_len
-                self.lanes[i] = _Lane(r, off, [])
-                if self.paged:
-                    need = self.pool.slots_for(
-                        min(max(width + r.max_new_tokens - 1, width),
-                            self.max_len))
-                    self.lanes[i].pages = self.pool.alloc(need)
-                    m["bt"][i] = 0
-                    m["bt"][i, :need] = self.lanes[i].pages
-                m["offsets"][i] = off
-                m["frontier"][i] = width
-                m["remaining"][i] = r.max_new_tokens - 1
-                m["pending"][i] = 0
-                m["live"][i] = True
-                new_lanes.append(i)
+            for gen in sorted(groups):
+                sub = groups[gen]
+                # the admitted group prefills right-aligned in slots
+                # [0, W): a lane freed mid-traffic restarts at slot 0
+                width = max(r.prompt_len for r in sub)
+                new_lanes = []
+                for r in sub:
+                    i = free.pop(0)
+                    off = width - r.prompt_len
+                    self.lanes[i] = _Lane(r, off, [], gen=gen)
+                    if self.paged:
+                        need = self.pool.slots_for(
+                            min(max(width + r.max_new_tokens - 1, width),
+                                self.max_len))
+                        self.lanes[i].pages = self.pool.alloc(need)
+                        m["bt"][i] = 0
+                        m["bt"][i, :need] = self.lanes[i].pages
+                    m["offsets"][i] = off
+                    m["frontier"][i] = width
+                    m["remaining"][i] = r.max_new_tokens - 1
+                    m["pending"][i] = 0
+                    m["live"][i] = True
+                    new_lanes.append(i)
+                built.append((gen, width, new_lanes))
         except BaseException:
             # crash-safe admission: a page-alloc failure mid-group must
             # not LOSE requests — whatever never reached a lane goes
             # back to the queue head (the one stranded on a half-built
             # lane relaunches through supervisor recovery); the crash
             # still propagates to the watchdog
-            placed = {self.lanes[j].req.uid for j in new_lanes}
-            placed.update(self.lanes[j].req.uid for j in range(
-                self.max_batch) if self.lanes[j] is not None)
+            placed = {self.lanes[j].req.uid for j in range(
+                self.max_batch) if self.lanes[j] is not None}
             self.scheduler.push_front(
                 [r for r in reqs if r.uid not in placed])
             raise
         self._dirty = True     # one upload, in step() before the slab
         self._note_admitted(reqs)
 
-        # chunked batched prefill over [0, width), right-aligned
-        tokens = np.zeros((self.max_batch, width), np.int32)
-        for i in new_lanes:
-            p = self.lanes[i].req.prompt
-            tokens[i, width - p.size:] = p
-        self._run_prefill(new_lanes, tokens, 0, width)
+        for gen, width, new_lanes in built:
+            # chunked batched prefill over [0, width), right-aligned,
+            # through this group's OWN generation of the weights
+            tokens = np.zeros((self.max_batch, width), np.int32)
+            for i in new_lanes:
+                p = self.lanes[i].req.prompt
+                tokens[i, width - p.size:] = p
+            self._run_prefill(new_lanes, tokens, 0, width,
+                              params=self._gen_params[gen])
         self.stats["prefill_tokens"] += sum(r.prompt_len for r in reqs)
         self.stats["prompt_tokens"] += sum(r.prompt_len for r in reqs)
 
     def _run_prefill(self, lane_ids: list[int], tokens: np.ndarray,
-                     start: int, cover_slots: int) -> None:
+                     start: int, cover_slots: int, params=None) -> None:
         """The chunked-prefill loop shared by group admission (whole
         width from slot 0) and prefix-cached per-lane admission (tail
         only, from slot ``start``): runs ``tokens[:, start:]`` through
@@ -1160,7 +1222,10 @@ class Engine:
         lane mask, then folds each lane's FIRST generated token into
         the mirror. ``cover_slots`` bounds the paged attention read.
         Callers account prefill_tokens/prompt_tokens themselves (pad
-        and shared-prefix slots don't count as prefilled tokens)."""
+        and shared-prefix slots don't count as prefilled tokens).
+        ``params`` selects the weight generation (defaults to the
+        current one)."""
+        params = self.params if params is None else params
         width = tokens.shape[1]
         lane_mask = np.zeros((self.max_batch,), bool)
         lane_mask[lane_ids] = True
@@ -1186,7 +1251,7 @@ class Engine:
         for c in sizes:
             if self.paged:
                 last, self.cache = self._prefill(
-                    self.params, self.cache, toks_j[:, pos:pos + c],
+                    params, self.cache, toks_j[:, pos:pos + c],
                     jnp.int32(pos), offsets, mask_j, bt_j,
                     read_pages=r_pf)
                 self.stats["pages_read"] += r_pf * len(lane_ids) * c
@@ -1195,7 +1260,7 @@ class Engine:
                     * len(lane_ids) * c)
             else:
                 last, self.cache = self._prefill(
-                    self.params, self.cache, toks_j[:, pos:pos + c],
+                    params, self.cache, toks_j[:, pos:pos + c],
                     jnp.int32(pos), offsets, mask_j)
             pos += c
             self.stats["prefill_chunks"] += 1
@@ -1238,7 +1303,9 @@ class Engine:
                 # the queue head; the crash propagates to the watchdog
                 self.scheduler.push_front(reqs[j:])
                 raise
-            self.lanes[i] = _Lane(r, 0, [], pages=pages)
+            self.lanes[i] = _Lane(r, 0, [], pages=pages,
+                                  gen=self._gen_pins.get(r.uid,
+                                                         self._gen))
             m["bt"][i] = 0
             m["bt"][i, :need] = self.lanes[i].pages
             m["offsets"][i] = 0
@@ -1293,7 +1360,14 @@ class Engine:
         when the pool can't cover the request — no lane/page state is
         held, but the eviction pass may already have dropped cold
         cached-idle entries (that reclaim is never undone)."""
-        m, extent = self._effective_match(r)
+        gen = self._gen_pins.get(r.uid, self._gen)
+        if gen != self._gen:
+            # a crash relaunch pinned to RETIRED weights must not match
+            # the radix tree: cached KV always belongs to the current
+            # generation (the hot-swap flushed everything older)
+            m, extent = Match([], 0), self._extent_pages(r)
+        else:
+            m, extent = self._effective_match(r)
         # pin everything matched BEFORE eviction/allocation can touch
         # it: the tail page only until its copy lands, the full pages
         # for the lane's lifetime (they go into its block table)
@@ -1321,7 +1395,7 @@ class Engine:
             self.pool.release(pin_tail)
             self.stats["cow_copies"] += 1
         pages = m.pages + own           # logical page order
-        self.lanes[i] = _Lane(r, 0, [], pages=pages)
+        self.lanes[i] = _Lane(r, 0, [], pages=pages, gen=gen)
         mir = self._mirror
         mir["bt"][i] = 0
         mir["bt"][i, :len(pages)] = pages
@@ -1416,33 +1490,99 @@ class Engine:
         elif self.active_lanes:
             self._decode_slab()
         self._harvest_faults(finished)
+        self._gc_generations()
+        if self._swap_monitor is not None:
+            self._swap_monitor.on_step_end(self)
         # failures parked DURING this step (e.g. a corrupted offload
         # record hit by _try_restore) come out with it, not one late
         finished.extend(self._pending_results)
         self._pending_results = []
         return finished
 
+    def _gc_generations(self) -> None:
+        """Drop weight generations no lane, preempted record, or pin
+        references any more — the moment the last admission-time-pinned
+        request retires, the pre-swap params are freed. The CURRENT
+        generation is always held."""
+        if len(self._gen_params) == 1:
+            return
+        held = {self._gen}
+        held.update(l.gen for l in self.lanes if l is not None)
+        held.update(p.gen for p in self._preempted)
+        held.update(self._gen_pins.values())
+        for g in [g for g in self._gen_params if g not in held]:
+            del self._gen_params[g]
+        self.stats["weight_generations_held"] = len(self._gen_params)
+
+    def swap_weights(self, artifact_dir: str, **kw):
+        """Zero-downtime weight hot-swap from a sealed artifact:
+        validate -> stage -> canary -> generational flip -> monitored
+        commit (or automatic rollback). See serving/hotswap.py for the
+        state machine; this is a convenience wrapper so callers hold
+        only an Engine. Must be called between steps (slab boundary)."""
+        from repro.serving import hotswap
+        return hotswap.swap_weights(self, artifact_dir, **kw)
+
     def _decode_slab(self) -> None:
         """One decode slab: the on-device ``lax.scan`` token loop, one
-        host sync per ``slab_k`` steps."""
+        host sync per ``slab_k`` steps.
+
+        During a hot-swap transition window (serving/hotswap.py) the
+        live lanes may span several WEIGHT GENERATIONS: the slab then
+        runs once per generation with the other generations' lanes
+        masked out of ``live`` (batched decode is row-independent, so a
+        masked lane's stream is bitwise-untouched — the same property
+        the prefill lane-mask and continuous-batching parity already
+        lean on). Outside a transition window — always, before the
+        first swap — there is exactly one generation and this is the
+        original single-call path."""
         self._sync_dstate()
         if self._faults is not None:
             self._faults.on_device_step(self._step_idx - 1, self)
+        gens = sorted({self.lanes[i].gen for i in self.active_lanes
+                       if self._mirror["live"][i]})
+        if len(gens) <= 1:
+            params = self._gen_params[gens[0]] if gens else self.params
+            self._slab_call(params, self.active_lanes)
+            return
+        for g in gens:
+            part = [i for i in self.active_lanes
+                    if self._mirror["live"][i]
+                    and self.lanes[i].gen == g]
+            mask = np.zeros(self.max_batch, bool)
+            mask[part] = True
+            save_live = self._mirror["live"].copy()
+            save_poison = self._mirror["poison"].copy()
+            # mask the other generations out of this call; restore
+            # their live/poison below (the scan zeroes poison and the
+            # download would otherwise clobber their saved state)
+            self._mirror["live"] = save_live & mask
+            self._mirror["poison"] = np.where(mask, save_poison, 0.0)
+            self._dirty = True
+            self._sync_dstate()
+            self._slab_call(self._gen_params[g], part)
+            m = self._mirror
+            m["live"] = np.where(mask, m["live"], save_live)
+            m["poison"] = np.where(mask, m["poison"], save_poison)
+            self._dirty = True
+
+    def _slab_call(self, params, lanes: list[int]) -> None:
+        """One jitted slab dispatch + host fold for ``lanes`` (the
+        other lanes ride along masked)."""
         t0 = time.monotonic()
         if self.paged:
-            fmax = int(max(self._mirror["frontier"][i]
-                           for i in self.active_lanes))
+            fmax = int(max(self._mirror["frontier"][i] for i in lanes))
             need = min(fmax + self.slab_k, self.max_len)
             r = _pow2_bucket(self.pool.slots_for(need), self.max_pages)
             block, self._dstate, self.cache = self._slab(
-                self.params, self.cache, self._dstate, read_pages=r)
-            n = len(self.active_lanes) * self.slab_k
+                params, self.cache, self._dstate, read_pages=r)
+            n = len(lanes) * self.slab_k
             self.stats["pages_read"] += r * n
             self.stats["pages_read_dense_equiv"] += (
                 self.pool.slots_for(self.max_len) * n)
         else:
             block, self._dstate, self.cache = self._slab(
-                self.params, self.cache, self._dstate)
+                params, self.cache, self._dstate)
         block = np.asarray(jax.block_until_ready(block))
         now = time.monotonic()
         self.stats["decode_s"] += now - t0
@@ -1451,8 +1591,8 @@ class Engine:
         if self.tracer.enabled:
             self.tracer.span_at(
                 "decode.slab", t0, now, k=self.slab_k,
-                lanes=len(self.active_lanes),
-                uids=[self.lanes[i].req.uid for i in self.active_lanes])
+                lanes=len(lanes),
+                uids=[self.lanes[i].req.uid for i in lanes])
         self._replay(block, now)
 
     def _run_mixed(self, decode_lanes: list[int],
@@ -1469,7 +1609,34 @@ class Engine:
 
         Also the phased engine's batched tail-prefill core
         (``decode_lanes == []``): then the call time is prefill time
-        and running decode lanes are stalled by it (counted)."""
+        and running decode lanes are stalled by it (counted).
+
+        As in ``_decode_slab``, a hot-swap transition window may leave
+        the participating lanes spanning several weight generations:
+        the call then runs once per generation over that generation's
+        lanes only (row independence keeps the split bitwise-exact);
+        the single-generation case — always, outside a swap window —
+        is the original one-call path."""
+        gens = sorted({self.lanes[i].gen for i in decode_lanes}
+                      | {self.lanes[i].gen for i in plan})
+        if len(gens) <= 1:
+            params = self._gen_params[gens[0]] if gens else self.params
+            self._mixed_call(decode_lanes, plan, params)
+            return
+        for g in gens:
+            dl = [i for i in decode_lanes if self.lanes[i].gen == g]
+            pl = {i: c for i, c in plan.items()
+                  if self.lanes[i].gen == g}
+            if dl or pl:
+                self._mixed_call(dl, pl, self._gen_params[g],
+                                 split=True)
+
+    def _mixed_call(self, decode_lanes: list[int], plan: dict[int, int],
+                    params, split: bool = False) -> None:
+        """One jitted fused call + host fold. ``split=True`` (per-
+        generation call) masks the poison carry to this call's own
+        lanes and clears only theirs afterwards, so a poison aimed at
+        another generation's lane still reaches ITS call."""
         m = self._mirror
         w = _pow2_bucket(max(plan.values(), default=1), self._wcap)
         tokens = np.zeros((self.max_batch, w), np.int32)
@@ -1494,13 +1661,22 @@ class Engine:
         r = _pow2_bucket(self.pool.slots_for(need), self.max_pages)
         if self._faults is not None:
             self._faults.on_device_step(self._step_idx - 1, self)
+        if split:
+            pmask = np.zeros(self.max_batch, bool)
+            pmask[list(covered)] = True
+            poison = np.where(pmask, m["poison"], 0.0)
+        else:
+            poison = m["poison"]
         t0 = time.monotonic()
         nxt, faulted, self.cache = self._mixed_fn(
-            self.params, self.cache, jnp.asarray(tokens),
+            params, self.cache, jnp.asarray(tokens),
             jnp.asarray(starts), jnp.asarray(q_lens),
             jnp.asarray(m["offsets"]), jnp.asarray(m["bt"]),
-            read_pages=r, poison=jnp.asarray(m["poison"]))
-        m["poison"][:] = 0.0         # one-shot, like the slab's carry
+            read_pages=r, poison=jnp.asarray(poison))
+        if split:
+            m["poison"] = np.where(pmask, 0.0, m["poison"])
+        else:
+            m["poison"][:] = 0.0     # one-shot, like the slab's carry
         # the host only needs the token vector when somebody emits a
         # token this call (a decode lane, or a prompt finishing its
         # tail); mid-prompt-only calls stay ASYNC so consecutive chunk

@@ -10,12 +10,21 @@
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import packing, sparse_mlp as sm, topk
 from repro.models import registry
+
+
+class UnbalancedMaskWarning(UserWarning):
+    """A mask handed to ``pack_params`` is not balanced: some block-
+    columns keep fewer blocks than the max, so the pack zero-pads them
+    up to the static ``nnz`` — numerically exact, but the advertised
+    1/(1-s) memory reduction silently degrades by the pad fraction."""
 
 
 def prune_params(cfg, params, masks, dtype=jnp.bfloat16):
@@ -29,13 +38,24 @@ def prune_params(cfg, params, masks, dtype=jnp.bfloat16):
         lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, out)
 
 
-def pack_params(cfg, params, masks, dtype=jnp.bfloat16):
+def pack_params(cfg, params, masks, dtype=jnp.bfloat16,
+                unbalanced: str = "warn",
+                pad_report: dict | None = None):
     """Sparse leaves -> PackedBCSC (static nnz = max kept per column,
     uniform under balanced selection).
 
     Gate/up pairs whose masks coincide (joint pruning) are marked
     ``joint`` so the fused GLU kernels stream each X tile once
-    (``packing.mark_joint``)."""
+    (``packing.mark_joint``).
+
+    An UNBALANCED mask no longer packs silently: ``unbalanced`` is
+    ``"warn"`` (``UnbalancedMaskWarning`` with the pad fraction),
+    ``"raise"`` (``ValueError``), or ``"ignore"``. A caller-supplied
+    ``pad_report`` dict is filled ``path -> pad fraction`` for every
+    padded path — ``artifact.seal`` records it in the manifest."""
+    if unbalanced not in ("warn", "raise", "ignore"):
+        raise ValueError(f"unbalanced={unbalanced!r}: expected "
+                         "'warn', 'raise' or 'ignore'")
     pruned = prune_params(cfg, params, masks, dtype)
     out = pruned
     for path, m in masks.items():
@@ -43,6 +63,17 @@ def pack_params(cfg, params, masks, dtype=jnp.bfloat16):
         bi, bo = sm.block_dims_for(cfg.blast, path)
         counts = np.asarray(jax.device_get(m)).sum(axis=-2)
         nnz = int(counts.max())
+        frac = packing.pad_fraction(m, nnz)
+        if frac > 0.0:
+            if pad_report is not None:
+                pad_report[path] = frac
+            msg = (f"mask for {path!r} is unbalanced: {frac:.1%} of "
+                   f"packed block slots are zero padding (nnz={nnz}, "
+                   f"min per-column count {int(counts.min())})")
+            if unbalanced == "raise":
+                raise ValueError(msg)
+            if unbalanced == "warn":
+                warnings.warn(msg, UnbalancedMaskWarning, stacklevel=2)
         p = packing.pack_stacked(w, m, bi, bo, nnz)
         out = sm.set_path(out, path, p)
     for gpath in masks:

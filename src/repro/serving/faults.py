@@ -258,6 +258,15 @@ class FaultPlan:
             return True
         return False
 
+    def on_artifact(self, d: str, kind: str) -> type:
+        """Corrupt the sealed artifact at ``d`` with injector ``kind``
+        (see ``ARTIFACT_FAULTS``) and audit it. Returns the typed
+        ``ArtifactError`` subclass the corruption must raise at
+        validate/canary time."""
+        expected = ARTIFACT_FAULTS[kind](d)
+        self.fired.append(f"artifact:{kind}")
+        return expected
+
     def on_offload_save(self, rec) -> None:
         """Host-store hook (offload.py), called AFTER checksums were
         computed: bit-flip the first element of the record's first
@@ -274,3 +283,183 @@ class FaultPlan:
         if self._engine is not None:
             self._engine.stats["faults_injected"] += 1
         self.fired.append(f"bitflip:save{nth}")
+
+
+# ----------------------------------------------- artifact corruption
+# One injector per corruption class of the sealed-artifact layer
+# (serving/artifact.py). Each takes an artifact DIRECTORY, mutates it
+# in place, and returns the typed ArtifactError subclass that
+# validate()/load(run_canaries=True) must raise — tests sweep the whole
+# dict and assert 100% detection before any engine step. The *_signed
+# kinds RECOMPUTE the checksum manifest after corrupting (a toolchain
+# bug or attacker that re-signs), proving the structural and canary
+# layers catch what the byte layer cannot.
+
+def _art_load(d):
+    import json
+    import os
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(d, "arrays.npz")) as z:
+        stored = {k: np.array(z[k]) for k in z.files}
+    return manifest, stored
+
+
+def _art_write(d, manifest, stored, resign=False):
+    import json
+    import os
+    if resign:
+        from repro.checkpointing.checkpoint import crc32_array
+        manifest["checksums"] = {k: crc32_array(v)
+                                 for k, v in stored.items()}
+    np.savez(os.path.join(d, "arrays.npz"), **stored)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def _art_mutate(stored, manifest, key, fn):
+    """Apply ``fn`` (float32 ndarray -> ndarray) to a stored array
+    through its TRUE dtype (bf16 leaves live in the npz as uint16
+    views)."""
+    import jax.numpy as jnp
+    arr = stored[key]
+    true_dt = manifest["dtypes"][key]
+    if str(arr.dtype) != true_dt:        # bf16-as-uint16 view
+        v = fn(np.asarray(arr.view(jnp.bfloat16), np.float32))
+        stored[key] = np.asarray(v, jnp.bfloat16).view(np.uint16)
+    else:
+        stored[key] = np.asarray(fn(arr), arr.dtype)
+
+
+def _first_packed(manifest):
+    return sorted(manifest["packed"])[0]
+
+
+def _bitflip(d, suffix):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    key = f"{_first_packed(manifest)}/{suffix}"
+    a = stored[key]
+    flat = a.reshape(-1).view(np.uint8)
+    flat[len(flat) // 2] ^= np.uint8(1)
+    _art_write(d, manifest, stored)
+    return art.ArtifactChecksumError
+
+
+def _fault_idx_bitflip(d):
+    return _bitflip(d, "idx")
+
+
+def _fault_block_bitflip(d):
+    return _bitflip(d, "blocks")
+
+
+def _fault_leaf_truncate(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    del stored[f"{_first_packed(manifest)}/blocks"]
+    _art_write(d, manifest, stored)
+    return art.ArtifactChecksumError
+
+
+def _fault_config_mismatch(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    manifest["fingerprint"] = "0" * 64
+    _art_write(d, manifest, stored)
+    return art.ArtifactConfigError
+
+
+def _fault_idx_oob_signed(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    path = _first_packed(manifest)
+    kb = int(manifest["packed"][path]["kb"])
+    idx = stored[f"{path}/idx"]
+    idx.reshape(-1)[0] = kb + 7         # gathers past the block-rows
+    _art_write(d, manifest, stored, resign=True)
+    return art.ArtifactStructureError
+
+
+def _fault_idx_dup_signed(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    path = _first_packed(manifest)
+    idx = stored[f"{path}/idx"]
+    nnz = idx.shape[-1]
+    assert nnz >= 2, "dup fault needs nnz >= 2"
+    flat = idx.reshape(-1, nnz)
+    flat[0, 1] = flat[0, 0]             # same block-row twice in col 0
+    # both duplicate slots must carry data for the double-count hazard
+    _art_mutate(stored, manifest, f"{path}/blocks",
+                lambda b: np.where(b == 0, np.float32(0.25), b))
+    _art_write(d, manifest, stored, resign=True)
+    return art.ArtifactStructureError
+
+
+def _fault_nan_block_signed(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    path = _first_packed(manifest)
+
+    def poison(b):
+        f = b.reshape(-1)
+        f[0] = np.nan
+        return b
+    _art_mutate(stored, manifest, f"{path}/blocks", poison)
+    _art_write(d, manifest, stored, resign=True)
+    return art.ArtifactNonFiniteError
+
+
+def _fault_joint_break_signed(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    # claim a joint promise on a gate leaf whose idx table we then skew
+    # away from its up partner — the fused-GLU fast path would contract
+    # the wrong blocks
+    gates = [p for p in manifest["packed"]
+             if p.split("/")[-1] in ("w_gate", "ws_gate")]
+    assert gates, "joint fault needs a gate leaf"
+    path = gates[0]
+    up = path.replace("gate", "up")
+    manifest["packed"][path]["joint"] = True
+    idx = stored[f"{path}/idx"]
+    uidx = stored.get(f"{up}/idx")
+    if uidx is not None and np.array_equal(idx, uidx):
+        kb = int(manifest["packed"][path]["kb"])
+        idx.reshape(-1)[0] = (int(idx.reshape(-1)[0]) + 1) % kb
+    _art_write(d, manifest, stored, resign=True)
+    return art.ArtifactStructureError
+
+
+def _fault_canary_weights_signed(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    path = _first_packed(manifest)
+    # structurally sound, finite, correctly signed — only the golden
+    # generations can tell these weights are not the sealed ones
+    _art_mutate(stored, manifest, f"{path}/blocks", lambda b: b * 1.5)
+    _art_write(d, manifest, stored, resign=True)
+    return art.ArtifactCanaryError
+
+
+def _fault_canary_tamper(d):
+    from repro.serving import artifact as art
+    manifest, stored = _art_load(d)
+    manifest["canaries"][0]["tokens"][0] += 1
+    _art_write(d, manifest, stored)
+    return art.ArtifactChecksumError
+
+
+ARTIFACT_FAULTS = {
+    "idx_bitflip": _fault_idx_bitflip,
+    "block_bitflip": _fault_block_bitflip,
+    "leaf_truncate": _fault_leaf_truncate,
+    "config_mismatch": _fault_config_mismatch,
+    "idx_oob_signed": _fault_idx_oob_signed,
+    "idx_dup_signed": _fault_idx_dup_signed,
+    "nan_block_signed": _fault_nan_block_signed,
+    "joint_break_signed": _fault_joint_break_signed,
+    "canary_weights_signed": _fault_canary_weights_signed,
+    "canary_tamper": _fault_canary_tamper,
+}

@@ -197,13 +197,23 @@ class AsyncEngine:
 
     def __init__(self, engine, *, idle_wait_s: float = 0.002,
                  watchdog_s: float | None = None,
-                 max_recoveries: int = 0):
+                 max_recoveries: int = 0,
+                 metrics_port: int | None = None):
         self.engine = engine
         self._idle_wait_s = idle_wait_s
         # deque.append / popleft are GIL-atomic: the loop side appends,
         # the engine thread pops — no lock needed
         self._inbox: deque = deque()
         self._cancels: deque = deque()
+        # hot-swap requests (serving/hotswap.py): the engine thread
+        # drains these BETWEEN steps — the slab-boundary requirement
+        self._swaps: deque = deque()
+        # live Prometheus scrape endpoint (None = off, 0 = ephemeral
+        # port; the bound address lands in ``metrics_addr``)
+        self._metrics_port = metrics_port
+        self._metrics_srv = None
+        self._metrics_thread: threading.Thread | None = None
+        self.metrics_addr: tuple[str, int] | None = None
         self._wake = threading.Event()
         self._stop = False
         self._thread: threading.Thread | None = None
@@ -238,7 +248,44 @@ class AsyncEngine:
             self._monitor = threading.Thread(
                 target=self._watch, name="serving-watchdog", daemon=True)
             self._monitor.start()
+        if self._metrics_port is not None and self._metrics_srv is None:
+            self._start_metrics_server()
         return self
+
+    def _start_metrics_server(self) -> None:
+        """Stdlib-only live ``/metrics`` endpoint: a tiny threaded HTTP
+        server rendering the engine's typed registry as Prometheus text
+        on every scrape. Reads are GIL-atomic snapshots of plain
+        numbers — no lock against the stepping thread needed."""
+        import http.server
+        eng = self.engine
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self):          # noqa: N802 (stdlib API name)
+                if self.path.split("?")[0] not in ("/", "/metrics"):
+                    self.send_response(404)
+                    self.end_headers()
+                    return
+                body = eng.metrics.prometheus_text().encode()
+                self.send_response(200)
+                self.send_header(
+                    "Content-Type",
+                    "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, *args):
+                pass               # scrapes must not spam stderr
+
+        srv = http.server.ThreadingHTTPServer(
+            ("127.0.0.1", self._metrics_port), Handler)
+        self._metrics_srv = srv
+        self.metrics_addr = srv.server_address[:2]
+        self._metrics_thread = threading.Thread(
+            target=srv.serve_forever, name="serving-metrics",
+            daemon=True)
+        self._metrics_thread.start()
 
     async def __aenter__(self) -> "AsyncEngine":
         return self.start()
@@ -275,6 +322,22 @@ class AsyncEngine:
         exc = RequestCancelledError(-1, "cancelled: engine shut down")
         for s in leftovers:
             s._fail_threadsafe(exc)
+        while self._swaps:
+            _, _, fut, floop = self._swaps.popleft()
+            try:
+                floop.call_soon_threadsafe(
+                    lambda f=fut: f.done() or f.set_exception(
+                        RuntimeError("engine shut down mid-swap")))
+            except RuntimeError:
+                pass
+        if self._metrics_srv is not None:
+            self._metrics_srv.shutdown()
+            self._metrics_srv.server_close()
+            self._metrics_srv = None
+            if self._metrics_thread is not None:
+                await loop.run_in_executor(
+                    None, self._metrics_thread.join)
+                self._metrics_thread = None
 
     # --------------------------------------------------------- submit
     async def submit_async(self, prompt, max_new_tokens: int = 32, *,
@@ -297,7 +360,40 @@ class AsyncEngine:
         await stream._submitted
         return stream
 
+    async def swap_weights_async(self, artifact_dir: str, **kw):
+        """Hot-swap the serving weights from a sealed artifact without
+        stopping the engine: the swap request is queued to the engine
+        thread, which runs validate/stage/canary/flip BETWEEN steps (a
+        slab boundary). Resolves to the live ``SwapReport`` once the
+        swap FLIPPED; raises the typed ``ArtifactError`` (weights
+        untouched) when the artifact fails validation or its canaries.
+        Keyword args pass through to ``hotswap.swap_weights``."""
+        if self._thread is None or self._stop:
+            raise RuntimeError(
+                "AsyncEngine is not running — use 'async with "
+                "AsyncEngine(engine)' or call start()")
+        loop = asyncio.get_running_loop()
+        fut = loop.create_future()
+        self._swaps.append((artifact_dir, kw, fut, loop))
+        self._wake.set()
+        return await fut
+
     # -------------------------------------------------- engine thread
+    def _drain_swaps(self) -> None:
+        while self._swaps:
+            d, kw, fut, floop = self._swaps.popleft()
+            try:
+                out = self.engine.swap_weights(d, **kw)
+                done = lambda f=fut, r=out: (  # noqa: E731
+                    f.done() or f.set_result(r))
+            except BaseException as e:
+                done = lambda f=fut, e=e: (    # noqa: E731
+                    f.done() or f.set_exception(e))
+            try:
+                floop.call_soon_threadsafe(done)
+            except RuntimeError:
+                pass           # loop gone: nobody is awaiting
+
     def _drain_inbox(self) -> None:
         eng = self.engine
         while self._inbox:
@@ -367,6 +463,7 @@ class AsyncEngine:
             while True:
                 self._beat = time.monotonic()
                 self._drain_cancels()
+                self._drain_swaps()
                 self._drain_inbox()
                 if self._has_work():
                     self._busy = True

@@ -1,0 +1,211 @@
+"""Zero-downtime weight hot-swap with canary gating and automatic
+rollback (DESIGN.md; ISSUE 10 tentpole).
+
+State machine (one swap at a time, driven between engine steps — i.e.
+at a slab boundary, the engine's only consistent host-sync point):
+
+    IDLE -> STAGED  artifact validated (bytes + structure layers) and
+                    the new params placed on device NEXT TO the serving
+                    set — serving never pauses;
+         -> CANARY  the sealed golden generations are replayed on the
+                    staged weights through the real decode path
+                    (artifact.canary_run); a gate failure raises
+                    ``ArtifactCanaryError`` with a postmortem and the
+                    swap never flips — zero corrupted tokens emitted;
+         -> FLIPPED generation counter bumps: NEW admissions decode
+                    under the new params, every in-flight lane keeps
+                    decoding under its admission-time generation
+                    (engine._decode_slab/_run_mixed split per
+                    generation — old-gen streams stay bitwise-identical
+                    to a no-swap run, zero requests dropped), and the
+                    prefix cache is flushed (its pages hold old-gen KV);
+         -> COMMITTED after ``monitor_steps`` engine steps with at most
+                    ``quarantine_limit`` new-generation lane
+                    quarantines; the old params are freed by the
+                    engine's generation GC when their last lane
+                    retires;
+         -> ROLLED_BACK automatically if new-generation quarantines
+                    exceed the limit inside the window: ANOTHER
+                    generation bump that reuses the previous params
+                    object, with a flight-recorder postmortem — lanes
+                    admitted under the bad generation keep their
+                    weights (their streams are already suspect and get
+                    quarantined individually; re-pinning them would
+                    corrupt their KV mid-stream).
+
+Obs: ``swap.stage`` / ``swap.canary`` / ``swap.flip`` /
+``swap.commit`` / ``swap.rollback`` spans+events on the engine tracer;
+``weight_swaps`` / ``swap_canary_failures`` / ``swap_rollbacks`` /
+``swap_canary_tokens`` / ``swap_quarantines`` counters and the
+``weight_generation`` / ``weight_generations_held`` gauges in the
+engine's metrics registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.serving import artifact
+
+IDLE = "IDLE"
+STAGED = "STAGED"
+CANARY = "CANARY"
+FLIPPED = "FLIPPED"
+COMMITTED = "COMMITTED"
+ROLLED_BACK = "ROLLED_BACK"
+
+
+@dataclasses.dataclass
+class SwapReport:
+    """Returned by ``swap_weights`` at flip time and MUTATED by the
+    monitor when the window closes (COMMITTED) or a quarantine spike
+    rolls the swap back — callers keep the reference."""
+    state: str
+    from_gen: int
+    to_gen: int
+    fingerprint: str
+    canary: dict
+    stage_s: float
+    canary_s: float
+    flip_s: float
+    monitor_steps: int
+    quarantines: int = 0
+    rollback_reason: str | None = None
+    rollback_gen: int | None = None
+
+
+class _SwapMonitor:
+    """Post-flip watchdog the engine ticks: ``note_quarantine`` from
+    ``_fail_lane`` (only new-generation lane failures count — an old
+    lane dying of an unrelated injected fault must not void a good
+    swap), ``on_step_end`` from ``step()``. Commit on window end,
+    rollback on a quarantine spike."""
+
+    def __init__(self, report: SwapReport, gen: int, prev_params,
+                 monitor_steps: int, quarantine_limit: int):
+        self.report = report
+        self.gen = gen
+        self.prev_params = prev_params
+        self.remaining = monitor_steps
+        self.limit = quarantine_limit
+
+    def note_quarantine(self, gen: int, engine) -> None:
+        if gen != self.gen:
+            return
+        self.report.quarantines += 1
+        engine.stats["swap_quarantines"] += 1
+        if self.report.quarantines > self.limit:
+            _rollback(engine, self, "quarantine_spike")
+
+    def on_step_end(self, engine) -> None:
+        self.remaining -= 1
+        if self.remaining > 0:
+            return
+        engine._swap_monitor = None
+        self.report.state = COMMITTED
+        if engine.tracer.enabled:
+            engine.tracer.event("swap.commit", gen=self.gen,
+                                quarantines=self.report.quarantines)
+
+
+def _flip_generation(engine, params) -> int:
+    """The shared generation bump (flip AND rollback): new admissions
+    route to ``params``, in-flight lanes keep their own generation, the
+    prefix cache is flushed (its cached pages hold KV computed under
+    another generation's weights — serving them to a new-generation
+    admission would mix weights within one stream)."""
+    g = engine._gen + 1
+    engine._gen = g
+    engine._gen_params[g] = params
+    engine.params = params
+    if engine.pcache is not None:
+        engine.pcache.flush()
+    engine.stats["weight_generation"] = g
+    engine.stats["weight_generations_held"] = len(engine._gen_params)
+    return g
+
+
+def _rollback(engine, mon: _SwapMonitor, reason: str) -> None:
+    t0 = time.monotonic()
+    engine._swap_monitor = None
+    g = _flip_generation(engine, mon.prev_params)
+    engine.stats["swap_rollbacks"] += 1
+    r = mon.report
+    r.state = ROLLED_BACK
+    r.rollback_reason = reason
+    r.rollback_gen = g
+    engine.tracer.span_at("swap.rollback", t0, time.monotonic(),
+                          bad_gen=mon.gen, to_gen=g, reason=reason,
+                          quarantines=r.quarantines)
+    engine.tracer.postmortem(
+        "swap.rollback", bad_gen=mon.gen, restored_gen=g, cause=reason,
+        quarantines=r.quarantines, fingerprint=r.fingerprint)
+
+
+def swap_weights(engine, artifact_dir: str, *, monitor_steps: int = 8,
+                 quarantine_limit: int = 0, max_token_mismatches: int = 0,
+                 max_logit_drift: float = 0.0, dist=None) -> SwapReport:
+    """Stage a sealed artifact, canary it, and flip the engine onto it
+    generationally. Returns the (live) ``SwapReport`` in state FLIPPED;
+    the installed monitor later moves it to COMMITTED or ROLLED_BACK.
+    Raises a typed ``ArtifactError`` — WITHOUT touching the serving
+    weights — when the artifact fails any validation layer."""
+    if engine._swap_monitor is not None:
+        raise RuntimeError(
+            "previous swap is still in its monitoring window")
+    dist = engine.dist if dist is None else dist
+    tr = engine.tracer
+
+    # STAGED: bytes + structure layers, then device placement beside
+    # the live weights (both generations resident until GC)
+    t0 = time.monotonic()
+    try:
+        params, manifest = artifact.load(artifact_dir, engine.cfg)
+    except artifact.ArtifactError as e:
+        tr.postmortem("swap.validate_failure", artifact=artifact_dir,
+                      error=type(e).__name__, detail=str(e))
+        raise
+    for leaf in jax.tree_util.tree_leaves(params):
+        leaf.block_until_ready()
+    t1 = time.monotonic()
+    tr.span_at("swap.stage", t0, t1, artifact=artifact_dir,
+               fingerprint=manifest["fingerprint"])
+
+    # CANARY: behavioural layer, on the real decode path
+    gold = artifact.golden_logits(artifact_dir, manifest)
+    try:
+        canary = artifact.verify_canaries(
+            engine.cfg, params, manifest, gold,
+            max_token_mismatches=max_token_mismatches,
+            max_logit_drift=max_logit_drift, dist=dist)
+    except artifact.ArtifactCanaryError as e:
+        engine.stats["swap_canary_failures"] += 1
+        tr.span_at("swap.canary", t1, time.monotonic(),
+                   artifact=artifact_dir, passed=False)
+        tr.postmortem("swap.canary_failure", artifact=artifact_dir,
+                      fingerprint=manifest["fingerprint"],
+                      detail=str(e))
+        raise
+    n_tok = sum(len(c["tokens"]) for c in manifest.get("canaries", []))
+    engine.stats["swap_canary_tokens"] += n_tok
+    t2 = time.monotonic()
+    tr.span_at("swap.canary", t1, t2, artifact=artifact_dir,
+               passed=True, tokens=n_tok)
+
+    # FLIPPED: generational cutover at the slab boundary
+    prev_gen, prev_params = engine._gen, engine.params
+    g = _flip_generation(engine, params)
+    engine.stats["weight_swaps"] += 1
+    t3 = time.monotonic()
+    tr.span_at("swap.flip", t2, t3, from_gen=prev_gen, to_gen=g,
+               fingerprint=manifest["fingerprint"])
+    report = SwapReport(
+        state=FLIPPED, from_gen=prev_gen, to_gen=g,
+        fingerprint=manifest["fingerprint"], canary=canary,
+        stage_s=t1 - t0, canary_s=t2 - t1, flip_s=t3 - t2,
+        monitor_steps=monitor_steps)
+    engine._swap_monitor = _SwapMonitor(
+        report, g, prev_params, monitor_steps, quarantine_limit)
+    return report

@@ -212,6 +212,28 @@ class PagePool:
             self._free.append(p)
         self._check()
 
+    def uncache(self, pages: list[int]) -> int:
+        """Revoke the prefix cache's ownership of ``pages`` regardless
+        of reference state — the weight hot-swap flush (hotswap.py):
+        cached KV computed under retired weights must never be matched
+        again. An idle page frees immediately; a page some lane still
+        reads just loses its cached flag and frees on the lane's final
+        release (the lane's own read of it stays valid — its KV belongs
+        to the lane's admission-time generation). Uncached/free entries
+        are ignored (idempotent). Returns pages freed right now."""
+        freed = []
+        for p in pages:
+            assert 0 <= p < self.n_pages
+            if not self._cached[p]:
+                continue
+            self._cached[p] = False
+            if self._rc[p] == 0:
+                self._n_cached_idle -= 1
+                freed.append(p)
+        self._free.extend(freed)
+        self._check()
+        return len(freed)
+
     # ------------------------------------------------------------- helpers
     def reset_peaks(self) -> None:
         """Restart both watermarks from the CURRENT state (the engine's

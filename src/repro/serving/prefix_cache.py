@@ -296,6 +296,26 @@ class PrefixCache:
                     nd.parent = None
         return freed
 
+    def flush(self) -> int:
+        """Drop EVERY cached entry at once — the weight hot-swap barrier
+        (serving/hotswap.py): all cached KV was computed under weights
+        that are being retired, so no future admission may match it.
+        Unlike ``evict``, referenced pages are handled too: they lose
+        their cached flag now (``pool.uncache``) and free when the last
+        reading lane releases them — the reading lanes themselves are
+        unaffected (their KV matches their own admission generation).
+        Returns the number of pages dropped from the tree."""
+        pages: list[int] = []
+        stack = [self.root]
+        while stack:
+            nd = stack.pop()
+            stack.extend(nd.children.values())
+            pages.extend(nd.pages)
+            pages.extend(t.page for t in nd.tails)
+        self.pool.uncache(pages)
+        self.root = _Node([], [], None)
+        return len(pages)
+
     # ---------------------------------------------------------- inspection
     def __len__(self) -> int:
         """Cached pages currently held by the tree."""

@@ -103,13 +103,13 @@ class Supervisor:
                         frontier=int(m["frontier"][i]),
                         remaining=int(m["remaining"][i]),
                         n_pages=len(lane.pages), pinned={},
-                        recovered=True))
+                        recovered=True, gen=lane.gen))
                     continue
                 except OffloadCapacityError:
                     pass        # host store full: fall through
                 except Exception:
                     pass        # device download failed: fall through
-            relaunch.append((req, list(gen)))
+            relaunch.append((req, list(gen), lane.gen))
 
     def _resolve_preempted(self, device_lost: bool,
                            relaunch: list) -> list:
@@ -138,7 +138,7 @@ class Supervisor:
                 except Exception:
                     pass
             eng._offload.drop(pre.req.uid)
-            relaunch.append((pre.req, list(pre.generated)))
+            relaunch.append((pre.req, list(pre.generated), pre.gen))
         return keep
 
     def _rebuild(self, keep_preempted: list) -> None:
@@ -167,7 +167,7 @@ class Supervisor:
     def _relaunch(self, relaunch: list) -> None:
         eng = self.engine
         reqs, deadlines = [], []
-        for req, emitted in relaunch:
+        for req, emitted, gen in relaunch:
             # remember the ORIGINAL split so results re-split there;
             # chains across repeated crashes (prompt may already be
             # orig + earlier emissions)
@@ -175,6 +175,11 @@ class Supervisor:
                 req.uid, (req.prompt, []))
             eng._recovered_prefix[req.uid] = (orig,
                                               list(prev) + list(emitted))
+            # a relaunch mid-swap must re-prefill and continue under
+            # its ADMISSION-TIME weights — greedy-decode determinism
+            # (the bitwise recovery guarantee) only holds against the
+            # same generation; the pin is dropped when the lane retires
+            eng._gen_pins[req.uid] = gen
             nr = Request(
                 req.uid,
                 np.concatenate([req.prompt,

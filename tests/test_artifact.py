@@ -1,0 +1,201 @@
+"""Validated serving artifacts (serving/artifact.py): seal/validate/
+load round-trip is bitwise, every seeded corruption class is caught by
+the layered defense (bytes -> structure -> canaries) with its TYPED
+error before a token could be served, and a property-style bit-flip
+sweep over every manifest region detects 100%. Also the export-side
+satellite: ``pack_params`` no longer packs an unbalanced mask silently.
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+
+from repro.core import packing, sparse_mlp as sm, topk
+from repro.models import registry
+from repro.serving import artifact, export
+from repro.serving.faults import ARTIFACT_FAULTS, FaultPlan
+
+
+def _masks(cfg, params, keep_frac=0.5):
+    masks = {}
+    for path in registry.sparse_paths(cfg):
+        w = sm.get_path(params, path)
+        bi, bo = sm.block_dims_for(cfg.blast, path)
+
+        def mk(wi):
+            s = topk.block_norms(wi, bi, bo)
+            kb = wi.shape[-2] // bi
+            return topk.topk_mask_per_col(s, max(1, int(kb * keep_frac)))
+
+        fn = mk
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        masks[path] = fn(w)
+    return masks
+
+
+@pytest.fixture(scope="module")
+def sealed(tmp_path_factory):
+    cfg = tiny_cfg()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    packed = export.pack_params(cfg, params, _masks(cfg, params),
+                                dtype=jnp.float32)
+    d = str(tmp_path_factory.mktemp("artifact") / "model")
+    manifest = artifact.seal(cfg, packed, d)
+    return cfg, packed, d, manifest
+
+
+def test_seal_validate_load_roundtrip(sealed):
+    cfg, packed, d, manifest = sealed
+    assert manifest["format"] == artifact.FORMAT
+    assert manifest["fingerprint"] == artifact.fingerprint(cfg)
+    assert artifact.validate(d, cfg)["fingerprint"] == \
+        manifest["fingerprint"]
+    loaded, m2 = artifact.load(d, cfg, run_canaries=True)
+    flat0 = {k: np.asarray(jax.device_get(v))
+             for k, v in artifact._flatten_params(packed)[0].items()}
+    flat1 = {k: np.asarray(jax.device_get(v))
+             for k, v in artifact._flatten_params(loaded)[0].items()}
+    assert set(flat0) == set(flat1)
+    for k in flat0:
+        np.testing.assert_array_equal(flat0[k], flat1[k])
+    # packed metadata (static pytree fields) survives the round-trip
+    p0 = {k: v for k, v in artifact._flatten_params(packed)[1].items()}
+    p1 = {k: v for k, v in artifact._flatten_params(loaded)[1].items()}
+    assert p0 == p1
+
+
+def test_canaries_are_deterministic(sealed):
+    cfg, packed, d, manifest = sealed
+    assert manifest["canaries"], "seal produced no canaries"
+    for c in manifest["canaries"]:
+        toks, logits = artifact.canary_run(cfg, packed, c["prompt"],
+                                           len(c["tokens"]))
+        assert toks.tolist() == c["tokens"]
+
+
+def test_corruption_sweep_every_class_typed(sealed, tmp_path):
+    """THE acceptance sweep: every injector in ARTIFACT_FAULTS corrupts
+    a fresh copy; validate/load must raise exactly the typed error the
+    injector promises — 100% detection, zero silent loads."""
+    cfg, _, d, _ = sealed
+    caught = {}
+    for kind in ARTIFACT_FAULTS:
+        cp = str(tmp_path / kind)
+        shutil.copytree(d, cp)
+        plan = FaultPlan()
+        expected = plan.on_artifact(cp, kind)
+        assert f"artifact:{kind}" in plan.fired
+        with pytest.raises(expected) as ei:
+            artifact.load(cp, cfg, run_canaries=True)
+        assert isinstance(ei.value, artifact.ArtifactError)
+        caught[kind] = type(ei.value).__name__
+    assert len(caught) == len(ARTIFACT_FAULTS)        # 100% detection
+    # the *_signed kinds re-sign the checksums: they MUST get past the
+    # byte layer and be caught by the deeper layer they target
+    for kind, name in caught.items():
+        if kind.endswith("_signed"):
+            assert name != "ArtifactChecksumError", (kind, name)
+
+
+def test_bitflip_sweep_all_regions(sealed, tmp_path):
+    """Property-style: flip ONE bit in every stored array region (and
+    one byte of the manifest itself); ``validate`` catches each."""
+    cfg, _, d, manifest = sealed
+    regions = sorted(manifest["checksums"])
+    misses = []
+    for n, region in enumerate(regions):
+        cp = str(tmp_path / f"flip{n}")
+        shutil.copytree(d, cp)
+        data = dict(np.load(os.path.join(cp, "arrays.npz")))
+        a = data[region]
+        buf = bytearray(a.tobytes())
+        buf[len(buf) // 2] ^= 0x10
+        data[region] = np.frombuffer(bytes(buf), a.dtype).reshape(a.shape)
+        np.savez(os.path.join(cp, "arrays.npz"), **data)
+        try:
+            artifact.validate(cp, cfg)
+            misses.append(region)
+        except artifact.ArtifactError:
+            pass
+    assert not misses, f"undetected bit flips in: {misses}"
+    # a torn manifest is an IO error, not a crash
+    cp = str(tmp_path / "manifest")
+    shutil.copytree(d, cp)
+    with open(os.path.join(cp, "manifest.json"), "r+") as f:
+        f.seek(10)
+        f.write("#")
+    with pytest.raises(artifact.ArtifactIOError):
+        artifact.validate(cp, cfg)
+
+
+def test_validate_rejects_wrong_config(sealed):
+    cfg, _, d, _ = sealed
+    other = tiny_cfg(d_ff=128)
+    with pytest.raises(artifact.ArtifactConfigError):
+        artifact.validate(d, other)
+
+
+def test_missing_artifact_is_io_error(tmp_path):
+    with pytest.raises(artifact.ArtifactIOError):
+        artifact.validate(str(tmp_path / "nope"))
+
+
+# ------------------------------------------- export unbalanced satellite
+def _unbalance(masks):
+    """Drop one kept block from one column of the first mask, making it
+    unbalanced; returns the edited path."""
+    path = next(iter(masks))
+    m = np.asarray(jax.device_get(masks[path])).copy()
+    kept = np.argwhere(m[..., 0])          # indices into (lead..., Kb)
+    m[tuple(kept[0]) + (0,)] = False
+    masks[path] = jnp.asarray(m)
+    return path
+
+
+def test_pack_params_unbalanced_warns_and_reports():
+    """An unbalanced mask (global top-k style) used to pack silently
+    with hidden zero padding; now it warns with the pad fraction,
+    reports per path, and can be made fatal."""
+    cfg = tiny_cfg()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    masks = _masks(cfg, params)
+    path = _unbalance(masks)
+    report: dict = {}
+    with pytest.warns(export.UnbalancedMaskWarning, match="unbalanced"):
+        packed = export.pack_params(cfg, params, masks,
+                                    dtype=jnp.float32,
+                                    pad_report=report)
+    assert path in report and 0.0 < report[path] < 1.0
+    assert report[path] == pytest.approx(
+        packing.pad_fraction(masks[path]))
+    # packing stays numerically exact despite the padding
+    p = sm.get_path(packed, path)
+    assert not packing.structure_violations(p)
+    with pytest.raises(ValueError, match="unbalanced"):
+        export.pack_params(cfg, params, masks, dtype=jnp.float32,
+                           unbalanced="raise")
+    with pytest.warns(export.UnbalancedMaskWarning):
+        export.pack_params(cfg, params, masks, dtype=jnp.float32)
+
+
+def test_seal_records_pad_fractions(tmp_path):
+    cfg = tiny_cfg()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    masks = _masks(cfg, params)
+    _unbalance(masks)
+    report: dict = {}
+    with pytest.warns(export.UnbalancedMaskWarning):
+        packed = export.pack_params(cfg, params, masks,
+                                    dtype=jnp.float32,
+                                    pad_report=report)
+    assert report
+    d = str(tmp_path / "padded")
+    manifest = artifact.seal(cfg, packed, d, pad=report)
+    assert manifest["pad"] == report
+    assert artifact.validate(d, cfg)["pad"] == report

@@ -1,0 +1,364 @@
+"""Zero-downtime weight hot-swap (serving/hotswap.py): the bitwise
+mid-stream oracle (old-generation lanes identical to a no-swap run,
+new admissions identical to a pure-new-weights run, zero requests
+dropped), canary gating (a corrupt artifact never flips), automatic
+rollback on a post-flip quarantine spike, crash recovery composing
+with the multi-generation window, and the live ``/metrics`` endpoint
+satellite."""
+import asyncio
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_cfg
+
+from repro.core import sparse_mlp as sm, topk
+from repro.models import registry
+from repro.obs.metrics import parse_prometheus_text
+from repro.obs.trace import Tracer
+from repro.serving import artifact, export, hotswap
+from repro.serving.engine import Engine
+from repro.serving.faults import EngineCrashError, FaultPlan
+from repro.serving.frontend import AsyncEngine
+from repro.serving.recovery import Supervisor
+
+
+def _masks(cfg, params):
+    masks = {}
+    for path in registry.sparse_paths(cfg):
+        w = sm.get_path(params, path)
+        bi, bo = sm.block_dims_for(cfg.blast, path)
+
+        def mk(wi):
+            s = topk.block_norms(wi, bi, bo)
+            return topk.topk_mask_per_col(
+                s, max(1, (wi.shape[-2] // bi) // 2))
+
+        fn = mk
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        masks[path] = fn(w)
+    return masks
+
+
+@pytest.fixture(scope="module")
+def world(tmp_path_factory):
+    """Two packed param sets (old/new weights) + sealed artifacts."""
+    cfg = tiny_cfg()
+    p_old = registry.init_params(cfg, jax.random.PRNGKey(0))
+    p_new = registry.init_params(cfg, jax.random.PRNGKey(7))
+    masks = _masks(cfg, p_old)
+    packed_old = export.pack_params(cfg, p_old, masks, dtype=jnp.float32)
+    packed_new = export.pack_params(cfg, p_new, masks, dtype=jnp.float32)
+    d = tmp_path_factory.mktemp("artifacts")
+    art_old, art_new = str(d / "old"), str(d / "new")
+    artifact.seal(cfg, packed_old, art_old)
+    artifact.seal(cfg, packed_new, art_new)
+    return cfg, packed_old, packed_new, art_old, art_new
+
+
+def _prompts(cfg, lens, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, cfg.vocab_size, int(n)).astype(np.int32)
+            for n in lens]
+
+
+def _drain(eng, out=None):
+    out = {} if out is None else out
+    steps = 0
+    while (len(eng.scheduler) or eng.active_lanes or eng._preempted
+           or eng._pending_results):
+        for r in eng.step():
+            out[r.uid] = r
+        steps += 1
+        assert steps < 500
+    return out
+
+
+def _reference(cfg, params, prompts, n_tok):
+    eng = Engine(cfg, params, max_batch=4, max_len=48, slab_k=4,
+                 page_size=8)
+    for p in prompts:
+        eng.submit(p, n_tok)
+    return _drain(eng)
+
+
+# ------------------------------------------------------ bitwise oracle
+def test_mid_stream_swap_bitwise_oracle(world):
+    """THE acceptance oracle: swap mid-decode while two lanes stream
+    and two more admit after the flip. Old-generation streams are
+    bitwise-identical to a no-swap run, new admissions to a run that
+    served the new weights from the start; zero requests dropped."""
+    cfg, packed_old, packed_new, _, art_new = world
+    prompts = _prompts(cfg, (6, 8, 5, 7))
+    base_old = _reference(cfg, packed_old, prompts, 16)
+    base_new = _reference(cfg, packed_new, prompts, 16)
+
+    eng = Engine(cfg, packed_old, max_batch=4, max_len=48, slab_k=4,
+                 page_size=8)
+    for p in prompts[:2]:
+        eng.submit(p, 16)
+    out, step, rep = {}, 0, None
+    while (len(eng.scheduler) or eng.active_lanes or eng._preempted
+           or eng._pending_results or step < 2):
+        if step == 1:
+            rep = eng.swap_weights(art_new, monitor_steps=3)
+            for p in prompts[2:]:            # admitted POST-flip
+                eng.submit(p, 16)
+        for r in eng.step():
+            assert r.error is None, r.error
+            out[r.uid] = r
+        step += 1
+
+    assert sorted(out) == [0, 1, 2, 3]       # zero dropped requests
+    for uid in (0, 1):                       # old gen: bitwise no-swap
+        assert out[uid].generated.tolist() == \
+            base_old[uid].generated.tolist()
+    for uid in (2, 3):                       # new gen: bitwise new-run
+        assert out[uid].generated.tolist() == \
+            base_new[uid].generated.tolist()
+    assert rep.state == hotswap.COMMITTED
+    assert rep.from_gen == 0 and rep.to_gen == 1
+    assert rep.canary["token_mismatches"] == 0
+    assert eng.stats["weight_swaps"] == 1
+    assert eng.stats["swap_rollbacks"] == 0
+    assert eng.stats["swap_canary_tokens"] > 0
+    # the old generation was freed once its last lane retired
+    assert len(eng._gen_params) == 1 and eng._gen in eng._gen_params
+
+
+def test_swap_idle_engine_and_double_swap(world):
+    """Swapping an idle engine works, a second swap chains (gen 2),
+    and a swap during an open monitoring window is refused."""
+    cfg, packed_old, packed_new, art_old, art_new = world
+    eng = Engine(cfg, packed_old, max_batch=2, max_len=48, slab_k=4,
+                 page_size=8)
+    rep1 = eng.swap_weights(art_new, monitor_steps=1)
+    with pytest.raises(RuntimeError, match="monitoring window"):
+        eng.swap_weights(art_old)
+    eng.submit(_prompts(cfg, (6,))[0], 8)
+    out = _drain(eng)
+    assert rep1.state == hotswap.COMMITTED
+    rep2 = eng.swap_weights(art_old, monitor_steps=1)
+    eng.submit(_prompts(cfg, (6,))[0], 8)
+    _drain(eng, out)
+    assert rep2.to_gen == 2 and rep2.state == hotswap.COMMITTED
+    # after the round-trip the engine serves the ORIGINAL weights again
+    base = _reference(cfg, packed_old, _prompts(cfg, (6,)), 8)
+    assert out[1].generated.tolist() == base[0].generated.tolist()
+
+
+# ------------------------------------------------------- canary gating
+@pytest.mark.slow
+def test_corrupt_artifact_never_flips(world, tmp_path):
+    """Every corruption class from the artifact chaos catalogue is
+    rejected at validate/canary time: the swap raises its typed error,
+    the serving weights and generation are untouched, and the stream in
+    flight finishes bitwise-clean on the old weights."""
+    import shutil
+    cfg, packed_old, _, _, art_new = world
+    prompts = _prompts(cfg, (6,))
+    base = _reference(cfg, packed_old, prompts, 8)
+
+    for kind in ("block_bitflip", "idx_oob_signed",
+                 "canary_weights_signed"):
+        cp = str(tmp_path / kind)
+        shutil.copytree(art_new, cp)
+        plan = FaultPlan()
+        expected = plan.on_artifact(cp, kind)
+        tr = Tracer()
+        eng = Engine(cfg, packed_old, max_batch=2, max_len=48,
+                     slab_k=4, page_size=8, tracer=tr)
+        eng.submit(prompts[0], 8)
+        eng.step()
+        with pytest.raises(expected):
+            eng.swap_weights(cp)
+        assert eng._gen == 0 and eng.params is packed_old
+        assert eng._swap_monitor is None
+        out = _drain(eng)
+        assert out[0].generated.tolist() == base[0].generated.tolist()
+        assert eng.stats["weight_swaps"] == 0
+        reasons = [p["reason"] for p in tr.postmortems]
+        if kind == "canary_weights_signed":
+            assert eng.stats["swap_canary_failures"] == 1
+            assert "swap.canary_failure" in reasons
+        else:
+            assert "swap.validate_failure" in reasons
+
+
+# -------------------------------------------------- automatic rollback
+def test_quarantine_spike_rolls_back(world):
+    """A post-flip quarantine spike on the NEW generation triggers
+    automatic rollback: the engine returns to the previous weights (as
+    a fresh generation), the report and postmortem record the cause,
+    and untouched old-generation lanes stream on bitwise-clean."""
+    cfg, packed_old, _, _, art_new = world
+    prompts = _prompts(cfg, (6, 8))
+    base = _reference(cfg, packed_old, prompts, 16)
+
+    tr = Tracer()
+    eng = Engine(cfg, packed_old, max_batch=4, max_len=48, slab_k=4,
+                 page_size=8, tracer=tr)
+    eng.submit(prompts[0], 16)
+    eng.step()
+    rep = eng.swap_weights(art_new, monitor_steps=8, quarantine_limit=0)
+    bad_gen = eng._gen
+    eng.submit(prompts[1], 16)
+    eng.step()
+    lane = next(i for i in eng.active_lanes
+                if eng.lanes[i].gen == bad_gen)
+    eng._mirror["poison"][lane] = np.inf    # the new weights "are bad"
+    eng._dirty = True
+    out = _drain(eng)
+    assert rep.state == hotswap.ROLLED_BACK
+    assert rep.rollback_reason == "quarantine_spike"
+    assert eng.params is packed_old         # rolled back, new gen id
+    assert eng._gen == rep.rollback_gen == 2
+    assert eng.stats["swap_rollbacks"] == 1
+    assert eng.stats["swap_quarantines"] == 1
+    assert out[0].error is None
+    assert out[0].generated.tolist() == base[0].generated.tolist()
+    assert out[1].error is not None         # the poisoned new-gen lane
+    pm = [p for p in tr.postmortems if p["reason"] == "swap.rollback"]
+    assert pm and pm[0]["meta"]["cause"] == "quarantine_spike"
+    # old-gen quarantines must NOT count against a later swap's window
+    assert eng._swap_monitor is None
+
+
+def test_old_gen_quarantine_does_not_rollback(world):
+    """An OLD-generation lane dying inside the monitoring window is not
+    evidence against the new weights — the swap still commits."""
+    cfg, packed_old, _, _, art_new = world
+    prompts = _prompts(cfg, (6, 8))
+    eng = Engine(cfg, packed_old, max_batch=4, max_len=48, slab_k=4,
+                 page_size=8)
+    eng.submit(prompts[0], 16)
+    eng.step()
+    old_lane = eng.active_lanes[0]
+    rep = eng.swap_weights(art_new, monitor_steps=4, quarantine_limit=0)
+    eng._mirror["poison"][old_lane] = np.inf
+    eng._dirty = True
+    out = _drain(eng)
+    while eng._swap_monitor is not None:    # idle steps tick the window
+        eng.step()
+    assert out[0].error is not None
+    assert rep.state == hotswap.COMMITTED
+    assert eng.stats["swap_rollbacks"] == 0
+    assert eng.stats["swap_quarantines"] == 0
+
+
+# ------------------------------------------- crash x swap composition
+@pytest.mark.slow
+def test_crash_mid_window_recovers_per_generation(world):
+    """Chaos composition: the stepper crashes while lanes from TWO
+    generations are in flight. The supervisor's relaunch pins each lane
+    to its admission-time generation, so every stream still finishes
+    bitwise-identical to its own reference run."""
+    cfg, packed_old, packed_new, _, art_new = world
+    prompts = _prompts(cfg, (6, 8, 5, 7))
+    base_old = _reference(cfg, packed_old, prompts, 16)
+    base_new = _reference(cfg, packed_new, prompts, 16)
+
+    eng = Engine(cfg, packed_old, max_batch=4, max_len=48, slab_k=4,
+                 page_size=8)
+    for p in prompts[:2]:
+        eng.submit(p, 16)
+    eng.step()
+    rep = eng.swap_weights(art_new, monitor_steps=50)
+    for p in prompts[2:]:
+        eng.submit(p, 16)
+    eng.step()                      # both generations now decoding
+    gens = {eng.lanes[i].gen for i in eng.active_lanes}
+    assert gens == {0, 1}, "window did not overlap generations"
+    # kill the stepper mid-window; device lost => every lane relaunches
+    # through the generation-pinned path
+    eng.install_faults(FaultPlan().crash(eng._step_idx,
+                                         device_lost=True))
+    out = {}
+    try:
+        eng.step()
+        raise AssertionError("crash did not fire")
+    except EngineCrashError as e:
+        Supervisor(eng).recover(e)
+    assert set(eng._gen_pins.values()) == {0, 1}
+    _drain(eng, out)
+    for uid in (0, 1):
+        assert out[uid].error is None
+        assert out[uid].generated.tolist() == \
+            base_old[uid].generated.tolist()
+    for uid in (2, 3):
+        assert out[uid].error is None
+        assert out[uid].generated.tolist() == \
+            base_new[uid].generated.tolist()
+    assert rep.state in (hotswap.FLIPPED, hotswap.COMMITTED)
+    assert len(eng._gen_params) == 1    # pins released, old gen freed
+
+
+# ------------------------------------- front door + /metrics satellite
+@pytest.mark.slow
+def test_async_swap_and_metrics_endpoint(world):
+    """The asyncio front door hot-swaps between steps without dropping
+    a stream, and the live ``/metrics`` endpoint serves the registry as
+    Prometheus text that round-trips through the repo's parser."""
+    cfg, packed_old, packed_new, _, art_new = world
+    prompts = _prompts(cfg, (6, 8))
+    base_old = _reference(cfg, packed_old, prompts, 12)
+    base_new = _reference(cfg, packed_new, prompts, 12)
+
+    async def drive():
+        eng = Engine(cfg, packed_old, max_batch=4, max_len=48,
+                     slab_k=4, page_size=8)
+        async with AsyncEngine(eng, metrics_port=0) as front:
+            s0 = await front.submit_async(prompts[0], 12)
+            await s0.__anext__()              # s0 is mid-decode
+            rep = await front.swap_weights_async(art_new,
+                                                 monitor_steps=2)
+            s1 = await front.submit_async(prompts[1], 12)
+            r0, r1 = await s0.result(), await s1.result()
+            host, port = front.metrics_addr
+            url = f"http://{host}:{port}/metrics"
+            text = urllib.request.urlopen(url, timeout=10) \
+                .read().decode()
+            with pytest.raises(urllib.error.HTTPError):   # 404
+                urllib.request.urlopen(f"http://{host}:{port}/nope",
+                                       timeout=10)
+            return eng, rep, r0, r1, text, url
+
+    eng, rep, r0, r1, text, url = asyncio.run(drive())
+    assert r0.generated.tolist() == base_old[0].generated.tolist()
+    assert r1.generated.tolist() == base_new[1].generated.tolist()
+    assert rep.state in (hotswap.FLIPPED, hotswap.COMMITTED)
+    parsed = parse_prometheus_text(text)
+    assert parsed["blast_weight_swaps"] == 1.0
+    assert parsed["blast_weight_generation"] == 1.0
+    assert parsed["blast_generated_tokens"] == \
+        eng.stats["generated_tokens"]
+    assert parsed["blast_swap_canary_tokens"] > 0
+    # the endpoint went down with the front door
+    with pytest.raises(urllib.error.URLError):
+        urllib.request.urlopen(url, timeout=2)
+
+
+def test_async_swap_rejects_corrupt_artifact(world, tmp_path):
+    import shutil
+    cfg, packed_old, _, _, art_new = world
+    cp = str(tmp_path / "bad")
+    shutil.copytree(art_new, cp)
+    expected = FaultPlan().on_artifact(cp, "idx_bitflip")
+
+    async def drive():
+        eng = Engine(cfg, packed_old, max_batch=2, max_len=48,
+                     slab_k=4, page_size=8)
+        async with AsyncEngine(eng) as front:
+            s = await front.submit_async(_prompts(cfg, (6,))[0], 8)
+            with pytest.raises(expected):
+                await front.swap_weights_async(cp)
+            await s.result()
+        return eng
+
+    eng = asyncio.run(drive())
+    assert eng._gen == 0 and eng.stats["weight_swaps"] == 0
